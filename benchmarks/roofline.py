@@ -1,0 +1,139 @@
+"""§Roofline table builder: reads the dry-run JSONs and derives the three
+roofline terms per (arch x shape x mesh).
+
+    compute term    = HLO_matmul_FLOPs / (chips x 197e12)
+    memory term     = HLO_bytes / (chips x 819e9)
+    collective term = collective_bytes / (chips x 50e9)
+
+All three use the trip-count-corrected per-device numbers from
+launch/hlo_stats.py (the per-device value IS the per-chip share, so the
+formulas reduce to per_device / unit_rate).  MODEL_FLOPS comes from
+launch/model_flops.py; the ratio exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16e9          # v5e
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def _compulsory_bytes_per_device(cell: dict) -> float | None:
+    """Analytic LOWER bound on HBM traffic per device per step: parameters
+    touched once (+ optimizer state r/w for train), inputs/cache once.
+    The HLO count is the conservative UPPER bound; real TPU traffic lies
+    between — both roofline fractions are reported."""
+    try:
+        from repro.models import registry
+        from repro.models.common import SHAPES, count_params
+        api = registry.get(cell["arch"])
+        cellspec = SHAPES[cell["shape"]]
+        n = count_params(api.param_defs())
+        chips = cell["chips"]
+        if cellspec.kind == "train":
+            per_param = 2 + 2 + 16 + 8      # p r/w bf16, m+v r/w f32, grad f32 r/w... lower bound
+            act = cellspec.global_batch * cellspec.seq_len * 4 / chips
+            return per_param * n / chips + act
+        if cellspec.kind == "prefill":
+            cache = cell["memory"]["output_bytes"]      # written once
+            return 2 * n / chips + cache
+        # decode: weights once + cache once
+        cache = cell["memory"]["argument_bytes"] \
+            - 2 * n / chips                              # cache-ish args
+        return 2 * n / chips + max(cache, 0)
+    except Exception:
+        return None
+
+
+def derive(cell: dict) -> dict | None:
+    if cell.get("status") != "ok":
+        return None
+    a = cell["analyzed"]
+    t_comp = a["matmul_flops_per_device"] / PEAK_FLOPS
+    t_mem = a["bytes_accessed_per_device"] / HBM_BW
+    t_coll = a["collective_bytes_total"] / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    bound = max(t_comp, t_mem, t_coll)
+    lb = _compulsory_bytes_per_device(cell)
+    t_mem_lb = (lb / HBM_BW) if lb else t_mem
+    bound_opt = max(t_comp, t_mem_lb, t_coll)
+    out = {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "chips": cell["chips"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_memory_lb_s": t_mem_lb,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": t_comp / bound if bound > 0 else 0.0,
+        "roofline_fraction_opt": t_comp / bound_opt if bound_opt > 0
+        else 0.0,
+        "peak_device_gb": cell["memory"]["peak_device_bytes"] / 1e9,
+        "fits_v5e": cell["memory"]["peak_device_bytes"] <= HBM_PER_CHIP,
+        "compile_s": cell["compile_s"],
+    }
+    # MODEL_FLOPS ratio
+    try:
+        from repro.launch.model_flops import model_flops
+        from repro.models import registry
+        from repro.models.common import SHAPES
+        api = registry.get(cell["arch"])
+        mf = model_flops(api, SHAPES[cell["shape"]])
+        hlo_total = a["matmul_flops_per_device"] * cell["chips"]
+        out["model_flops"] = mf
+        out["model_over_hlo"] = mf / hlo_total if hlo_total else 0.0
+    except Exception as e:                      # pragma: no cover
+        out["model_flops_error"] = str(e)
+    return out
+
+
+def table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':17s} {'shape':12s} {'mesh':10s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+           f"{'dom':>5s} {'roofl%':>13s} {'MF/HLO':>7s} {'GB':>6s} fits")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        frac = (f"{100 * r['roofline_fraction']:5.1f}-"
+                f"{100 * r.get('roofline_fraction_opt', 0):5.1f}%")
+        lines.append(
+            f"{r['arch']:17s} {r['shape']:12s} {r['mesh']:10s} "
+            f"{r['t_compute_s']:9.3e} {r['t_memory_s']:9.3e} "
+            f"{r['t_collective_s']:9.3e} {r['dominant'][:5]:>5s} "
+            f"{frac:>13s} "
+            f"{r.get('model_over_hlo', 0):7.3f} "
+            f"{r['peak_device_gb']:6.2f} {'y' if r['fits_v5e'] else 'N'}")
+    return "\n".join(lines)
+
+
+def main():
+    cells = load_cells()
+    rows = [d for d in (derive(c) for c in cells) if d]
+    skips = [c for c in cells if c.get("status") == "skipped"]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(table(rows))
+    print(f"\n{len(rows)} compiled cells, {len(skips)} recorded skips")
+    for c in skips:
+        print(f"  SKIP {c['arch']} {c['shape']} ({c['mesh'] if 'mesh' in c else ''}): {c['reason']}")
+    out = os.path.join(RESULTS, "..", "roofline_table.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print("saved ->", os.path.normpath(out))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,82 @@
+"""Sweep driver: run the multi-pod dry-run for every (arch x shape x mesh)
+cell as an isolated subprocess (the 512-device XLA flag must be set before
+jax init, and a fresh process per cell also bounds compile-cache memory).
+
+Resumable: cells whose JSON already exists are skipped.
+
+    PYTHONPATH=src python benchmarks/run_dryrun_all.py [--only-missing]
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    # cheap first: early signal
+    "tinyllama-1.1b", "whisper-medium", "mamba2-2.7b", "zamba2-2.7b",
+    "qwen2-7b", "qwen2.5-14b", "qwen2.5-32b", "chameleon-34b",
+    "dbrx-132b", "deepseek-v2-236b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    tag = "pod" if multi_pod else "single"
+    return os.path.join(OUT, f"{arch}_{shape}_{tag}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=float, default=3600)
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    archs = args.archs.split(",")
+    shapes = args.shapes.split(",")
+    todo = [(a, s, mp) for mp in (False, True)
+            for a in archs for s in shapes]
+    done = failed = skipped = 0
+    for arch, shape, mp in todo:
+        path = cell_path(arch, shape, mp)
+        if os.path.exists(path):
+            skipped += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", OUT]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        print(f"[dryrun] {arch} {shape} {'pod' if mp else 'single'} ...",
+              flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            dt = time.time() - t0
+            if r.returncode == 0:
+                done += 1
+                print(f"  ok in {dt:.0f}s", flush=True)
+            else:
+                failed += 1
+                err = (r.stderr or r.stdout).strip().splitlines()
+                print(f"  FAIL in {dt:.0f}s: {err[-3:] if err else '?'}",
+                      flush=True)
+                with open(path.replace(".json", ".err"), "w") as f:
+                    f.write(r.stdout + "\n--- stderr ---\n" + r.stderr)
+        except subprocess.TimeoutExpired:
+            failed += 1
+            print(f"  TIMEOUT after {args.timeout}s", flush=True)
+            with open(path.replace(".json", ".err"), "w") as f:
+                f.write("timeout")
+    print(f"[dryrun] done={done} failed={failed} cached={skipped}")
+    return 0 if failed == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

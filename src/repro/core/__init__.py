@@ -1,0 +1,17 @@
+"""The paper's primary contribution: the offloading formalism (Sec 2), conv
+slicing (Sec 3), strategies S1-baseline/S1/RowByRow/ZigZag (Sec 4) plus the
+beyond-paper Tiled/Hilbert and S2 families, the ILP (Sec 5) with its
+HiGHS + polishing solver, and the TPU tile-schedule planner that carries
+the same cost model into the Pallas kernels."""
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import TPU_V5E, HardwareModel, TpuChipModel
+from repro.core.formalism import MemoryState, Step, StepError, run_steps
+from repro.core.strategies import (GroupedStrategy, best_heuristic, hilbert,
+                                   row_by_row, s1_baseline, tiled, zigzag)
+
+__all__ = [
+    "ConvSpec", "HardwareModel", "TpuChipModel", "TPU_V5E",
+    "MemoryState", "Step", "StepError", "run_steps",
+    "GroupedStrategy", "best_heuristic", "hilbert", "row_by_row",
+    "s1_baseline", "tiled", "zigzag",
+]

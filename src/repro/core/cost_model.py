@@ -1,0 +1,70 @@
+"""Platform model (paper Sec 2.1) and duration model (Def 3).
+
+The accelerator is capable of ``nbop_pe`` MAC operations per ``t_acc`` cycles.
+The on-chip memory has size ``size_mem``.  Loading one element from DRAM to
+on-chip memory costs ``t_l``; writing one element back costs ``t_w``.  All
+durations are in accelerator cycles; all sizes are unit-less integers, as in
+the paper.
+
+Unit convention (see DESIGN.md §6): the paper's Example 2 counts *spatial*
+pixels for duration (an I_slice listing 12 tensor elements over C_in=2
+channels contributes ``6 * t_l``), while memory-footprint statements count
+tensor *elements* (``M_2^inp = 32``).  We therefore keep sets of spatial
+locations and expose both countings; duration uses spatial counts, footprint
+uses element counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Generic accelerator of paper Fig. 1."""
+
+    nbop_pe: int            # MAC ops available per t_acc window
+    size_mem: int | None = None   # on-chip memory capacity (elements); None = unconstrained (paper Sec 7.1)
+    t_l: float = 1.0        # cycles to load one (spatial) element DRAM -> on-chip
+    t_w: float = 1.0        # cycles to write one (spatial) element on-chip -> DRAM
+    t_acc: float = 1.0      # cycles per compute step
+
+    def nb_patches_max_s1(self, nb_op_value: int, c_out: int) -> int:
+        """Paper Sec 4.2: max patches the PE can consume in one S1 step."""
+        cap = self.nbop_pe // (nb_op_value * c_out)
+        if cap < 1:
+            raise ValueError(
+                f"accelerator too small: nbop_pe={self.nbop_pe} < one patch "
+                f"({nb_op_value}*{c_out} MACs)")
+        return cap
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e preset — used by core.planner to drive Pallas BlockSpec choices.
+# The paper's abstract units become bytes/seconds here.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TpuChipModel:
+    """Roofline constants for the target chip (TPU v5e, per the brief)."""
+
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw_per_link: float = 50e9     # bytes/s per ICI link
+    vmem_bytes: int = 128 * 1024 * 1024
+    mxu_dim: int = 128                # systolic array edge; align matmul dims
+
+    def as_hardware_model(self, dtype_bytes: int = 2) -> HardwareModel:
+        """Express the chip in the paper's (t_l, t_w, t_acc, nbop) terms.
+
+        Time unit = seconds.  ``t_acc = 1s`` window gives ``nbop_pe =
+        peak_flops/2`` MACs (1 MAC = 2 FLOP); loading one element costs
+        ``dtype_bytes / hbm_bw`` seconds; size_mem is VMEM in elements.
+        """
+        t_l = dtype_bytes / self.hbm_bw
+        return HardwareModel(
+            nbop_pe=int(self.peak_flops / 2.0),
+            size_mem=self.vmem_bytes // dtype_bytes,
+            t_l=t_l, t_w=t_l, t_acc=1.0)
+
+
+TPU_V5E = TpuChipModel()

@@ -1,0 +1,295 @@
+"""Strategy optimisation (paper Sec 5 + Sec 7.1 solver setup).
+
+The paper solves the MILP with CPLEX, warm-started from the best of
+ZigZag/Row-by-Row ("MIP Start") and switched to "Solution Polishing" after
+60 s.  CPLEX is unavailable offline, so we reproduce the *method*:
+
+  1. heuristic seeds: Row-by-Row, ZigZag (paper) + Tiled, Hilbert (ours);
+  2. a polishing local search over ordered patch partitions — simulated
+     annealing with bitmask-incremental cost evaluation (this plays the role
+     of CPLEX's genetic polishing, seeded exactly like their MIP start);
+  3. the exact MILP (Sec 5) via HiGHS (`scipy.optimize.milp`) with a time
+     limit, when the model is small enough;
+  4. the analytic lower bound, so optimality gaps are always reported.
+
+The search space is restricted to K = K_min groups (Sec 7.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import ilp as ilp_mod
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.strategies import (
+    GroupedStrategy, best_heuristic, hilbert, k_min, lower_bound,
+    row_by_row, tiled, zigzag)
+
+
+@dataclasses.dataclass
+class SolveResult:
+    strategy: GroupedStrategy
+    objective: float            # eq. 15 value under ``hw``
+    lower_bound: float
+    seed_objective: float       # best heuristic (the MIP start)
+    milp_status: str            # "optimal" | "feasible" | "skipped" | "infeasible"
+    milp_objective: float | None
+    polish_objective: float
+    reload_ok: bool             # satisfies nb_data_reload
+
+    @property
+    def gap(self) -> float:
+        if self.lower_bound <= 0:
+            return 0.0
+        return self.objective / self.lower_bound - 1.0
+
+    @property
+    def gain_vs_seed(self) -> float:
+        """Paper Fig 13 metric: relative gain over best heuristic."""
+        if self.seed_objective == 0:
+            return 0.0
+        return 1.0 - self.objective / self.seed_objective
+
+
+# --------------------------------------------------------------------- #
+# Polishing local search
+# --------------------------------------------------------------------- #
+
+_RELOAD_PENALTY = 10_000.0
+
+
+class _SearchState:
+    """Ordered partition with O(affected-groups) incremental cost."""
+
+    def __init__(self, spec: ConvSpec, groups: Sequence[Sequence[int]],
+                 p: int, nb_data_reload: int):
+        self.spec = spec
+        self.p = p
+        self.r = nb_data_reload
+        self.groups: list[list[int]] = [list(g) for g in groups]
+        self.k = len(self.groups)
+        self.gmask = [spec.group_mask(g) for g in self.groups]
+        self.loads = np.zeros(spec.num_pixels, dtype=np.int32)
+        self.total_load = 0
+        for kk in range(self.k):
+            isl = self._islice(kk)
+            self.total_load += isl.bit_count()
+            for j in spec.pixels_of_mask(isl):
+                self.loads[j] += 1
+        self.violations = int(np.maximum(self.loads - self.r, 0).sum())
+
+    def _islice(self, kk: int) -> int:
+        prev = self.gmask[kk - 1] if kk > 0 else 0
+        return self.gmask[kk] & ~prev
+
+    def cost(self) -> float:
+        return self.total_load + _RELOAD_PENALTY * self.violations
+
+    # -- incremental update of steps' I_slices after group masks change --
+    def _refresh_islices(self, ks: Sequence[int], old_islices: dict[int, int]):
+        for kk in ks:
+            old = old_islices[kk]
+            new = self._islice(kk)
+            if old == new:
+                continue
+            gone, came = old & ~new, new & ~old
+            self.total_load += came.bit_count() - gone.bit_count()
+            for j in self.spec.pixels_of_mask(gone):
+                if self.loads[j] > self.r:
+                    self.violations -= 1
+                self.loads[j] -= 1
+            for j in self.spec.pixels_of_mask(came):
+                self.loads[j] += 1
+                if self.loads[j] > self.r:
+                    self.violations += 1
+
+    def _affected(self, ks: Sequence[int]) -> list[int]:
+        out = set()
+        for kk in ks:
+            out.add(kk)
+            if kk + 1 < self.k:
+                out.add(kk + 1)
+        return sorted(out)
+
+    def _snapshot(self, ks: Sequence[int]) -> dict[int, int]:
+        return {kk: self._islice(kk) for kk in ks}
+
+    # -- moves: each returns an undo closure ------------------------------
+    def move_swap_patches(self, a: int, ia: int, b: int, ib: int):
+        ks = self._affected([a, b])
+        snap = self._snapshot(ks)
+        ga, gb = self.groups[a], self.groups[b]
+        ga[ia], gb[ib] = gb[ib], ga[ia]
+        self.gmask[a] = self.spec.group_mask(ga)
+        self.gmask[b] = self.spec.group_mask(gb)
+        self._refresh_islices(ks, snap)
+
+        def undo():
+            snap2 = self._snapshot(ks)
+            ga[ia], gb[ib] = gb[ib], ga[ia]
+            self.gmask[a] = self.spec.group_mask(ga)
+            self.gmask[b] = self.spec.group_mask(gb)
+            self._refresh_islices(ks, snap2)
+        return undo
+
+    def move_relocate(self, a: int, ia: int, b: int):
+        """Move one patch from group a (|a|>1) to group b (|b|<p)."""
+        ks = self._affected([a, b])
+        snap = self._snapshot(ks)
+        pid = self.groups[a].pop(ia)
+        self.groups[b].append(pid)
+        self.gmask[a] = self.spec.group_mask(self.groups[a])
+        self.gmask[b] = self.spec.group_mask(self.groups[b])
+        self._refresh_islices(ks, snap)
+
+        def undo():
+            snap2 = self._snapshot(ks)
+            self.groups[b].pop()
+            self.groups[a].insert(ia, pid)
+            self.gmask[a] = self.spec.group_mask(self.groups[a])
+            self.gmask[b] = self.spec.group_mask(self.groups[b])
+            self._refresh_islices(ks, snap2)
+        return undo
+
+    def move_reverse(self, a: int, b: int):
+        """2-opt on the group order: reverse segment [a, b]."""
+        ks = self._affected(range(a, b + 1))
+        snap = self._snapshot(ks)
+        self.groups[a:b + 1] = self.groups[a:b + 1][::-1]
+        self.gmask[a:b + 1] = self.gmask[a:b + 1][::-1]
+        self._refresh_islices(ks, snap)
+
+        def undo():
+            snap2 = self._snapshot(ks)
+            self.groups[a:b + 1] = self.groups[a:b + 1][::-1]
+            self.gmask[a:b + 1] = self.gmask[a:b + 1][::-1]
+            self._refresh_islices(ks, snap2)
+        return undo
+
+    def strategy(self, name: str = "polished") -> GroupedStrategy:
+        return GroupedStrategy(
+            name, self.spec, tuple(tuple(g) for g in self.groups if g))
+
+
+def polish(seed: GroupedStrategy, p: int, hw: HardwareModel,
+           nb_data_reload: int = 2, iters: int = 30_000,
+           rng_seed: int = 0) -> GroupedStrategy:
+    """Simulated-annealing polish of a seed strategy (our stand-in for
+    CPLEX solution polishing).  Keeps K fixed (= len(seed.groups))."""
+    spec = seed.spec
+    st = _SearchState(spec, seed.groups, p, nb_data_reload)
+    rng = random.Random(rng_seed)
+    best_cost = st.cost()
+    best = st.strategy()
+    cur = best_cost
+    t0, t1 = max(2.0, best_cost * 0.02), 0.05
+    for it in range(iters):
+        temp = t0 * (t1 / t0) ** (it / max(1, iters - 1))
+        kind = rng.random()
+        if st.k < 2:
+            break
+        if kind < 0.45:
+            a, b = rng.sample(range(st.k), 2)
+            if not st.groups[a] or not st.groups[b]:
+                continue
+            undo = st.move_swap_patches(
+                a, rng.randrange(len(st.groups[a])),
+                b, rng.randrange(len(st.groups[b])))
+        elif kind < 0.70:
+            a, b = rng.sample(range(st.k), 2)
+            if len(st.groups[a]) <= 1 or len(st.groups[b]) >= p:
+                continue
+            undo = st.move_relocate(a, rng.randrange(len(st.groups[a])), b)
+        else:
+            a = rng.randrange(st.k)
+            b = min(st.k - 1, a + rng.randint(1, 6))
+            if a >= b:
+                continue
+            undo = st.move_reverse(a, b)
+        new_cost = st.cost()
+        if new_cost <= cur or rng.random() < np.exp(-(new_cost - cur) / temp):
+            cur = new_cost
+            if cur < best_cost:
+                best_cost = cur
+                best = st.strategy()
+        else:
+            undo()
+    return best
+
+
+# --------------------------------------------------------------------- #
+# HiGHS backend
+# --------------------------------------------------------------------- #
+
+def solve_milp(model: ilp_mod.IlpModel, time_limit: float = 60.0):
+    """Solve the Sec-5 MILP with HiGHS.  Returns (strategy|None, status,
+    objective|None)."""
+    from scipy.optimize import Bounds, LinearConstraint, milp
+
+    res = milp(
+        c=model.c,
+        constraints=LinearConstraint(model.a, model.lb, model.ub),
+        integrality=np.ones(model.num_vars),
+        bounds=Bounds(0, 1),
+        options={"time_limit": time_limit, "presolve": True})
+    if res.x is None:
+        status = "infeasible" if res.status == 2 else "timeout"
+        return None, status, None
+    strat = model.extract_groups(np.round(res.x))
+    status = "optimal" if res.status == 0 else "feasible"
+    return strat, status, float(res.fun)
+
+
+# --------------------------------------------------------------------- #
+# Front door
+# --------------------------------------------------------------------- #
+
+def solve(spec: ConvSpec, p: int, hw: HardwareModel,
+          nb_data_reload: int = 2,
+          size_mem: int | None = None,
+          time_limit: float = 30.0,
+          polish_iters: int = 30_000,
+          milp_var_limit: int = 60_000,
+          use_milp: bool = True,
+          rng_seed: int = 0) -> SolveResult:
+    """Find the best S1 strategy for ``spec`` on ``hw`` with group size p."""
+    k = k_min(spec, p)
+    seeds = [row_by_row(spec, p), zigzag(spec, p),
+             tiled(spec, p), hilbert(spec, p)]
+    mip_start = min(seeds[:2], key=lambda s: s.objective(hw))  # paper's seed
+    incumbent = min(seeds, key=lambda s: s.objective(hw))
+
+    polished = polish(incumbent, p, hw, nb_data_reload,
+                      iters=polish_iters, rng_seed=rng_seed)
+    if polished.objective(hw) < incumbent.objective(hw) and \
+            polished.max_reloads() <= max(nb_data_reload,
+                                          incumbent.max_reloads()):
+        incumbent = polished
+
+    milp_status, milp_obj = "skipped", None
+    if use_milp:
+        model = ilp_mod.build_ilp(spec, p, k=k,
+                                  nb_data_reload=nb_data_reload,
+                                  size_mem=size_mem)
+        if model.num_vars <= milp_var_limit:
+            strat, milp_status, raw = solve_milp(model, time_limit)
+            if strat is not None:
+                milp_obj = strat.objective(hw)
+                if milp_obj < incumbent.objective(hw):
+                    incumbent = strat
+        else:
+            milp_status = "skipped_too_large"
+
+    return SolveResult(
+        strategy=incumbent,
+        objective=incumbent.objective(hw),
+        lower_bound=lower_bound(spec, p, hw),
+        seed_objective=mip_start.objective(hw),
+        milp_status=milp_status,
+        milp_objective=milp_obj,
+        polish_objective=polished.objective(hw),
+        reload_ok=incumbent.max_reloads() <= nb_data_reload)

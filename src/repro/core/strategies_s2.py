@@ -1,0 +1,215 @@
+"""S2: offloading strategies that do NOT keep all kernels on-chip — the
+paper's stated future work (Sec 9: "strategies that operate at a finer
+granularity than patches and do not assume that all kernels are stored in
+on-chip memory during computation"), expressed in the same Def 1/2
+formalism.
+
+A step computes a (patch group, kernel group) pair: output *units* are
+(patch, kernel-group) cells, ``out`` ids = pid * G + g for G kernel groups.
+Two canonical orders trade input reloads against kernel reloads — exactly
+the weight-stationary / output-stationary dataflow choice of the GeMM
+planner:
+
+  * ``kernel_major`` (weight-stationary): for each kernel group, sweep all
+    patch groups — kernels loaded once each, input reloaded G times;
+  * ``patch_major`` (input-stationary): for each patch group, cycle the
+    kernel groups — input loaded once (plus halos), kernels reloaded
+    n_patch_groups times.
+
+Why S2 matters: S1 *requires* size_MEM ≥ all kernels + a patch + outputs;
+S2 runs under arbitrarily small kernel budgets.  ``best_s2`` searches
+(kernel-group size × order) under a memory cap and the PE budget —
+a concrete optimizer for the paper's future-work regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.formalism import Step
+from repro.core.strategies import zigzag
+
+
+def _chunks(seq, n):
+    return [tuple(seq[i:i + n]) for i in range(0, len(seq), n)]
+
+
+@dataclasses.dataclass(frozen=True)
+class S2Strategy:
+    """Ordered (patch-group, kernel-group-index) schedule."""
+
+    name: str
+    spec: ConvSpec
+    kernel_groups: tuple[tuple[int, ...], ...]
+    schedule: tuple[tuple[tuple[int, ...], int], ...]   # ((patch ids), kg)
+
+    def __post_init__(self):
+        seen: set[tuple[int, int]] = set()
+        for g, kg in self.schedule:
+            for pid in g:
+                for kid in self.kernel_groups[kg]:
+                    cell = (pid, kid)
+                    if cell in seen:
+                        raise ValueError(f"{cell} computed twice")
+                    seen.add(cell)
+        want = self.spec.num_patches * self.spec.n_kernels
+        if len(seen) != want:
+            raise ValueError(
+                f"{self.name}: covers {len(seen)} of {want} cells")
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.schedule)
+
+    @property
+    def n_kernel_groups(self) -> int:
+        return len(self.kernel_groups)
+
+    def out_unit(self, pid: int, kg: int) -> int:
+        return pid * self.n_kernel_groups + kg
+
+    # ------------------------------------------------------------------ #
+    def to_steps(self) -> list[Step]:
+        """Def-16-style eager-free semantics for BOTH inputs and kernels;
+        outputs written back at the next step."""
+        spec = self.spec
+        steps: list[Step] = []
+        res_pix = 0
+        res_ker = 0
+        prev_out = 0
+        for g, kg in self.schedule:
+            need_pix = spec.group_mask(g)
+            need_ker = 0
+            for kid in self.kernel_groups[kg]:
+                need_ker |= 1 << kid
+            out = 0
+            for pid in g:
+                out |= 1 << self.out_unit(pid, kg)
+            steps.append(Step(
+                f_inp=res_pix & ~need_pix,
+                f_ker=res_ker & ~need_ker,
+                w=prev_out,
+                i_slice=need_pix & ~res_pix,
+                k_sub=need_ker & ~res_ker,
+                out=out,
+                group=tuple(g),
+                kernel_group=self.kernel_groups[kg]))
+            res_pix, res_ker, prev_out = need_pix, need_ker, out
+        steps.append(Step(f_inp=res_pix, f_ker=res_ker, w=prev_out))
+        return steps
+
+    # ------------------------------------------------------------------ #
+    def objective(self, hw: HardwareModel) -> float:
+        """Full Def-3 duration: unlike S1 (eq. 15), kernel loads COUNT —
+        trading them against input reloads is the whole point of S2."""
+        spec = self.spec
+        total = 0.0
+        res_pix = res_ker = 0
+        kelem = spec.c_in * spec.h_k * spec.w_k
+        for g, kg in self.schedule:
+            need_pix = spec.group_mask(g)
+            need_ker = 0
+            for kid in self.kernel_groups[kg]:
+                need_ker |= 1 << kid
+            total += (need_pix & ~res_pix).bit_count() * hw.t_l
+            total += (need_ker & ~res_ker).bit_count() * kelem * hw.t_l
+            total += hw.t_acc
+            res_pix, res_ker = need_pix, need_ker
+        return total
+
+    def peak_memory_elements(self) -> int:
+        """Max on-chip elements during any step (inputs + kernels + the
+        step's output cells + the previous step's not-yet-written cells)."""
+        spec = self.spec
+        kelem = spec.c_in * spec.h_k * spec.w_k
+        peak = 0
+        prev_out_elems = 0
+        for g, kg in self.schedule:
+            pix = spec.group_mask(g).bit_count() * spec.c_in
+            ker = len(self.kernel_groups[kg]) * kelem
+            out = len(g) * len(self.kernel_groups[kg])
+            peak = max(peak, pix + ker + out + prev_out_elems)
+            prev_out_elems = out
+        return peak
+
+
+# --------------------------------------------------------------------- #
+# Builders
+# --------------------------------------------------------------------- #
+
+def _kernel_groups(spec: ConvSpec, kg_size: int):
+    return tuple(_chunks(list(range(spec.n_kernels)), kg_size))
+
+
+def kernel_major(spec: ConvSpec, p: int, kg_size: int) -> S2Strategy:
+    """Weight-stationary: kernels loaded once each; input swept per group."""
+    kgs = _kernel_groups(spec, kg_size)
+    patch_groups = [tuple(g) for g in zigzag(spec, p).groups]
+    sched = [(g, kg) for kg in range(len(kgs)) for g in patch_groups]
+    return S2Strategy(f"s2_kernel_major_kg{kg_size}", spec, kgs,
+                      tuple(sched))
+
+
+def patch_major(spec: ConvSpec, p: int, kg_size: int) -> S2Strategy:
+    """Input-stationary: each patch group stays while kernel groups cycle."""
+    kgs = _kernel_groups(spec, kg_size)
+    patch_groups = [tuple(g) for g in zigzag(spec, p).groups]
+    sched = [(g, kg) for g in patch_groups for kg in range(len(kgs))]
+    return S2Strategy(f"s2_patch_major_kg{kg_size}", spec, kgs,
+                      tuple(sched))
+
+
+def nb_patches_max_s2(spec: ConvSpec, hw: HardwareModel,
+                      kg_size: int) -> int:
+    """PE budget per step with only kg_size output channels computed."""
+    cap = hw.nbop_pe // (spec.nb_op_value * kg_size)
+    if cap < 1:
+        raise ValueError("PE cannot fit one patch x kernel-group step")
+    return cap
+
+
+@dataclasses.dataclass
+class S2Result:
+    strategy: S2Strategy
+    objective: float
+    peak_memory: int
+    feasible_s1: bool        # could S1 have run under this memory cap?
+
+
+def best_s2(spec: ConvSpec, hw: HardwareModel,
+            size_mem: int | None = None,
+            kg_sizes: Iterable[int] | None = None) -> S2Result:
+    """Search (kernel-group size x order) under the memory cap; the S1
+    comparison records whether the cap even admits an S1 strategy."""
+    size_mem = size_mem if size_mem is not None else hw.size_mem
+    if kg_sizes is None:
+        kg_sizes = [k for k in range(1, spec.n_kernels + 1)
+                    if spec.n_kernels % k == 0]
+    best: S2Result | None = None
+    for kg in kg_sizes:
+        p_max = max(1, min(nb_patches_max_s2(spec, hw, kg),
+                           spec.num_patches))
+        # under a tight memory cap the patch group must shrink too
+        p_cands = sorted({p_max, max(1, p_max // 2), max(1, p_max // 4),
+                          4, 2, 1})
+        for p in p_cands:
+            if p > p_max:
+                continue
+            for builder in (kernel_major, patch_major):
+                cand = builder(spec, p, kg)
+                peak = cand.peak_memory_elements()
+                if size_mem is not None and peak > size_mem:
+                    continue
+                obj = cand.objective(hw)
+                if best is None or obj < best.objective:
+                    s1_min_mem = (spec.kernel_elements
+                                  + spec.patch_masks[0].bit_count()
+                                  * spec.c_in + spec.c_out)
+                    best = S2Result(cand, obj, peak,
+                                    feasible_s1=(size_mem is None
+                                                 or s1_min_mem <= size_mem))
+    if best is None:
+        raise ValueError(f"no S2 strategy fits size_mem={size_mem}")
+    return best

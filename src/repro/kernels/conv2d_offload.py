@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: S1 convolution offloading (paper Sec 4 on TPU).
+
+Strategy S1, faithfully mapped to the TPU memory hierarchy:
+
+  * **K_sub / kernel residency** — all kernels Λ are fetched once and stay
+    in VMEM for the whole sweep.  Expressed with a BlockSpec whose index_map
+    is constant, so Pallas revisits (never re-fetches) the block: exactly
+    "loaded during the first step and never freed until the last step"
+    (Def 16).
+  * **I_slice** — the input lives in HBM (the paper's DRAM,
+    ``memory_space=pl.ANY``).  Each grid step DMAs the patch-group window
+    into a VMEM scratch buffer with ``pltpu.make_async_copy`` — action a4.
+  * **patch groups** — one step computes a row-run of T output columns for
+    *all* C_out channels (Property 1).  T comes from
+    ``core.planner.plan_conv`` (the nb_patches_max analogue under the VMEM
+    budget).  Grid order is zigzag (paper Sec 7.2) or row-by-row.
+  * **W / write-back** — the step's (C_out, 1, T) output block leaves VMEM
+    when the grid moves on — action a3.
+
+The MAC loop is an im2col-in-VMEM followed by one MXU ``jnp.dot``:
+(T, C_in*H_K*W_K) x (C_in*H_K*W_K, C_out).  On real hardware T and C_out
+should be padded to MXU lanes (multiples of 128); ``ops.conv2d`` handles
+padding.  Validated with ``interpret=True`` on CPU against ``ref.conv2d``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(x_hbm, w_ref, o_ref, win_buf, sem, *,
+                 t_run: int, s_h: int, s_w: int, h_k: int, w_k: int,
+                 w_out_tiles: int, zigzag: bool):
+    """One S1 step: DMA the input window, im2col in VMEM, one MXU dot."""
+    i = pl.program_id(0)            # output row
+    jt = pl.program_id(1)           # column-run index (possibly zigzagged)
+    if zigzag:
+        jt = jnp.where(i % 2 == 1, w_out_tiles - 1 - jt, jt)
+    t_in = (t_run - 1) * s_w + w_k
+
+    # a4: load I_slice — the (C_in, H_K, t_in) window — into VMEM.
+    cp = pltpu.make_async_copy(
+        x_hbm.at[:, pl.ds(i * s_h, h_k), pl.ds(jt * t_run * s_w, t_in)],
+        win_buf, sem)
+    cp.start()
+    cp.wait()
+
+    # im2col in VMEM: (T, C_in*H_K*W_K)
+    win = win_buf[...]
+    cols = [win[:, :, t * s_w:t * s_w + w_k].reshape(-1) for t in range(t_run)]
+    patches = jnp.stack(cols, axis=0)
+
+    # a6: one MXU matmul against the resident kernels (C_in*Hk*Wk, C_out).
+    # (f32 upcast: XLA:CPU interpret mode lacks a bf16 dot thunk; on TPU the
+    # MXU consumes bf16 directly and this cast fuses away.)
+    out = jnp.dot(patches.astype(jnp.float32),
+                  w_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    # (T, C_out) -> output block (C_out, 1, T)
+    o_ref[...] = out.T[:, None, :].astype(o_ref.dtype)
+
+
+def conv2d_offload(x: jax.Array, w: jax.Array, *,
+                   t_run: int, s_h: int = 1, s_w: int = 1,
+                   order: str = "zigzag",
+                   interpret: bool = True) -> jax.Array:
+    """S1 Pallas convolution.
+
+    Args:
+      x: input (C_in, H_in, W_in) — already padded (paper Remark 2).
+      w: kernels (N, C_in, H_K, W_K).
+      t_run: patches per step (row-run length); ``W_out % t_run == 0``
+        (``ops.conv2d`` pads/chooses for you).
+      order: "zigzag" (paper Sec 7.2) or "row" grid sweep.
+    """
+    c_in, h_in, w_in = x.shape
+    n, c_in2, h_k, w_k = w.shape
+    assert c_in == c_in2
+    h_out = (h_in - h_k) // s_h + 1
+    w_out = (w_in - w_k) // s_w + 1
+    assert w_out % t_run == 0, (w_out, t_run)
+    w_out_tiles = w_out // t_run
+    t_in = (t_run - 1) * s_w + w_k
+    w_mat = w.reshape(n, -1).T          # (C_in*Hk*Wk, N)
+
+    if order == "zigzag":
+        def out_index(i, jt):
+            return (0, i, jnp.where(i % 2 == 1, w_out_tiles - 1 - jt, jt))
+    else:
+        def out_index(i, jt):
+            return (0, i, jt)
+
+    kernel = functools.partial(
+        _conv_kernel, t_run=t_run, s_h=s_h, s_w=s_w, h_k=h_k, w_k=w_k,
+        w_out_tiles=w_out_tiles, zigzag=(order == "zigzag"))
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out, w_out_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),               # x stays in HBM
+            pl.BlockSpec((c_in * h_k * w_k, n), lambda i, jt: (0, 0)),  # Λ resident
+        ],
+        out_specs=pl.BlockSpec((n, 1, t_run), out_index),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out), x.dtype),
+        scratch_shapes=[pltpu.VMEM((c_in, h_k, t_in), x.dtype),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x, w_mat)

@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each wrapper: pads to kernel-friendly shapes, consults ``core.planner`` for
+the offloading schedule when the caller does not pin one, dispatches to the
+Pallas kernel (interpret=True on CPU — the TPU path flips the flag), and
+unpads.  ``ref.py`` holds the oracles; tests sweep shapes/dtypes and
+assert_allclose kernel vs oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner
+from repro.kernels import block_matmul as _bm
+from repro.kernels import conv2d_offload as _conv
+from repro.kernels import flash_decode as _fd
+
+_INTERPRET = True          # CPU container; TPU deployments set False.
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("t_run", "s_h", "s_w", "order"))
+def conv2d(x: jax.Array, w: jax.Array, *, t_run: int | None = None,
+           s_h: int = 1, s_w: int = 1, order: str = "zigzag") -> jax.Array:
+    """S1 Pallas convolution; ``t_run=None`` asks the planner."""
+    c_in, h_in, w_in = x.shape
+    n, _, h_k, w_k = w.shape
+    w_out = (w_in - w_k) // s_w + 1
+    if t_run is None:
+        from repro.core.conv_spec import ConvSpec
+        spec = ConvSpec(c_in, h_in, w_in, n, h_k, w_k, s_h, s_w)
+        t_run = planner.plan_conv(spec, dtype_bytes=x.dtype.itemsize
+                                  ).tiles["t"]
+    # pad W_in so W_out divides by t_run (extra columns discarded after)
+    pad_cols = ((-w_out) % t_run) * s_w
+    if pad_cols:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_cols)))
+    out = _conv.conv2d_offload(x, w, t_run=t_run, s_h=s_h, s_w=s_w,
+                               order=order, interpret=_INTERPRET)
+    return out[:, :, :w_out]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "order", "plan"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int | None = None,
+           bn: int | None = None, bk: int | None = None,
+           order: str | None = None, plan: bool = True) -> jax.Array:
+    """Planner-scheduled block GeMM."""
+    m, k = a.shape
+    _, n = b.shape
+    if bm is None or bn is None or bk is None or order is None:
+        p = planner.plan_matmul(m, n, k, dtype_bytes=a.dtype.itemsize)
+        bm = bm or min(p.tiles["bm"], 1 << (max(m, 8) - 1).bit_length())
+        bn = bn or min(p.tiles["bn"], 1 << (max(n, 8) - 1).bit_length())
+        bk = bk or min(p.tiles["bk"], 1 << (max(k, 8) - 1).bit_length())
+        order = order or p.order
+    a = _pad_to(_pad_to(a, 0, bm), 1, bk)
+    b = _pad_to(_pad_to(b, 0, bk), 1, bn)
+    out = _bm.block_matmul(a, b, bm=bm, bn=bn, bk=bk, order=order,
+                           interpret=_INTERPRET)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bkv",))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array | None = None, *,
+                     bkv: int | None = None) -> jax.Array:
+    """Batched GQA decode attention over a (padded) KV cache.
+
+    q: (B, H_q, D); k/v: (B, S, H_kv, D); lengths: (B,) valid cache lengths.
+    Returns (B, H_q, D).
+    """
+    b, h_q, d = q.shape
+    _, s, h_kv, _ = k.shape
+    assert h_q % h_kv == 0
+    g = h_q // h_kv
+    if bkv is None:
+        p = planner.plan_decode_attention(s, d, g, q.dtype.itemsize)
+        bkv = min(p.tiles["bkv"], s)
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+
+    qg = q.reshape(b, h_kv, g, d)
+    kg = jnp.moveaxis(k, 2, 1)           # (B, H_kv, S, D)
+    vg = jnp.moveaxis(v, 2, 1)
+
+    single = functools.partial(_fd.decode_attention, bkv=bkv,
+                               interpret=_INTERPRET)
+    per_head = jax.vmap(single, in_axes=(0, 0, 0, None))     # over H_kv
+    per_batch = jax.vmap(per_head, in_axes=(0, 0, 0, 0))     # over B
+    out = per_batch(qg, kg, vg, lengths)
+    return out.reshape(b, h_q, d)

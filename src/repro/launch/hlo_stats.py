@@ -1,0 +1,262 @@
+"""Structural analysis of optimized (post-SPMD) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts every while-loop
+body ONCE — a 60-layer scanned model reports ~1 layer of FLOPs.  This module
+parses the optimized HLO, recovers the call graph (while bodies, fusions,
+calls) and the loop trip counts, and rolls up
+
+  * matmul FLOPs (dot ops, 2*prod(out)*prod(contract) convention),
+  * bytes accessed (operands + outputs per surface op; fusion internals
+    excluded, matching XLA's one-kernel fusion model),
+  * per-collective bytes (result shape of each all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, -start counted once),
+
+each multiplied by the enclosing loops' trip counts.  Elementwise FLOPs are
+not counted (MXU roofline wants matmul FLOPs; documented in EXPERIMENTS).
+
+Validated in tests/test_hlo_stats.py against cost_analysis on loop-free
+programs and against analytic counts on scanned programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_CALLEE_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# surface ops that do not move data
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota"}
+
+
+def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    kind: str
+    rest: str           # text after the opening paren (operands + attrs)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: dict[str, str]
+    ops: list[Op]
+    is_entry: bool = False
+
+    def shape_of(self, name: str) -> str | None:
+        if name in self.params:
+            return self.params[name]
+        for op in self.ops:
+            if op.name == name:
+                return op.shape
+        return None
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and ("->" in line):
+            params = {}
+            for p in re.finditer(
+                    r"([\w\.\-]+)\s*:\s*("
+                    r"\([^)]*\)"                                # tuple type
+                    r"|[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?"    # array type
+                    r"|[a-z0-9]+\[\]"                           # scalar
+                    r")", m.group(3)):
+                params[p.group(1)] = p.group(2)
+            cur = Computation(name=m.group(2), params=params, ops=[],
+                              is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            cur.ops.append(Op(name=om.group(1), shape=om.group(2).strip(),
+                              kind=om.group(3), rest=om.group(4)))
+    return comps
+
+
+@dataclasses.dataclass
+class Stats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    collective_count: float = 0.0
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Stats", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        for c in _COLLECTIVES:
+            self.collective_bytes[c] += other.collective_bytes[c] * mult
+        self.collective_count += other.collective_count * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = 1
+    for _, dims in _shape_dims(op.shape):
+        for d in dims:
+            out_elems *= d
+    cm = _CONTRACT_RE.search(op.rest)
+    contract = 1
+    operands = _OPERAND_RE.findall(op.rest.split(", lhs_contracting")[0])
+    if cm and operands:
+        lhs_shape = comp.shape_of(operands[0])
+        if lhs_shape:
+            shapes = _shape_dims(lhs_shape)
+            if shapes:
+                dims = shapes[0][1]
+                for idx in (int(i) for i in cm.group(1).split(",") if i):
+                    if idx < len(dims):
+                        contract *= dims[idx]
+    return 2.0 * out_elems * contract
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    """Operands + output logical bytes for a surface op."""
+    total = float(_shape_bytes(op.shape))
+    # operands appear before the first attribute (comma-separated attrs all
+    # contain '='); just scan names and look them up.
+    head = op.rest.split("=")[0] if "=" in op.rest else op.rest
+    for name in _OPERAND_RE.findall(head):
+        s = comp.shape_of(name)
+        if s:
+            total += _shape_bytes(s)
+    return total
+
+
+def _trip_count(cond: Computation) -> int | None:
+    """Largest s32 scalar constant in the loop condition (counter LT bound).
+    jax-emitted scans always look like this; None if no constant found."""
+    best = None
+    for op in cond.ops:
+        m = _CONST_RE.search(f"= {op.shape} {op.kind}({op.rest}")
+        if op.kind == "constant":
+            mm = re.match(r"s32\[\]", op.shape)
+            if mm:
+                cm = re.search(r"constant\((\d+)\)", "constant(" + op.rest)
+                if cm:
+                    v = int(cm.group(1))
+                    best = v if best is None else max(best, v)
+    return best
+
+
+def analyze(hlo: str) -> Stats:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: dict[str, Stats] = {}
+    visiting: set[str] = set()
+
+    def total(name: str) -> Stats:
+        if name in memo:
+            return memo[name]
+        if name in visiting or name not in comps:
+            return Stats()
+        visiting.add(name)
+        comp = comps[name]
+        st = Stats()
+        for op in comp.ops:
+            if op.kind == "dot":
+                st.flops += _dot_flops(op, comp)
+                st.bytes_accessed += _op_bytes(op, comp)
+            elif op.kind == "while":
+                body = cond = None
+                m = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                if m:
+                    cond = m.group(1)
+                m = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                if m:
+                    body = m.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else None
+                if trips is None:
+                    trips = 1
+                    st.unknown_trip_loops += 1
+                if body:
+                    st.add(total(body), trips)
+                if cond:
+                    st.add(total(cond), trips)
+            elif op.kind in ("fusion", "call", "custom-call",
+                             "conditional", "map", "reduce",
+                             "reduce-window", "sort", "scatter", "select-and-scatter"):
+                st.bytes_accessed += _op_bytes(op, comp)
+                for callee in _CALLEE_RE.findall(op.rest):
+                    sub = total(callee)
+                    # fusion internals: count flops (a dot may hide inside)
+                    # but not bytes (one-kernel model).
+                    st.flops += sub.flops
+                    for c in _COLLECTIVES:
+                        st.collective_bytes[c] += sub.collective_bytes[c]
+                    st.collective_count += sub.collective_count
+            elif any(op.kind == c or op.kind == c + "-start"
+                     for c in _COLLECTIVES):
+                kind = op.kind.replace("-start", "")
+                b = float(_shape_bytes(op.shape))
+                st.collective_bytes[kind] += b
+                st.collective_count += 1
+                st.bytes_accessed += _op_bytes(op, comp)
+            elif op.kind.endswith("-done"):
+                pass
+            elif op.kind in _FREE_OPS:
+                pass
+            else:
+                st.bytes_accessed += _op_bytes(op, comp)
+        visiting.discard(name)
+        memo[name] = st
+        return st
+
+    return total(entry.name)

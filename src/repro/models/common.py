@@ -1,0 +1,231 @@
+"""Model substrate: parameter definitions with sharding, config dataclass.
+
+Parameters are defined once as a tree of ``ParamDef`` (shape + PartitionSpec
++ init kind); the same tree materialises as random weights (smoke tests /
+real training), as ShapeDtypeStructs (dry-run lowering — no allocation), or
+as a PartitionSpec tree (pjit in_shardings).
+
+Sharding vocabulary (DESIGN.md §5): mesh axes are ("data", "model") within a
+pod, with an optional leading "pod" axis for multi-pod (pure DP).  The
+``Axes`` helper abstracts whether "pod" exists.  Rules:
+
+  * TP dims (heads, d_ff, vocab, experts)          -> "model"
+  * FSDP/ZeRO storage dim (largest non-TP dim)     -> "data"
+  * batch / tokens                                  -> ("pod", "data")
+  * sequence-parallel activations (policy B)        -> "model" on seq
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------- #
+# Mesh axes abstraction
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    """Names of the mesh axes; ``pod`` is None on a single pod."""
+
+    pod: str | None = None
+    data: str = "data"
+    model: str = "model"
+
+    @property
+    def batch(self) -> tuple[str, ...] | str:
+        return (self.pod, self.data) if self.pod else self.data
+
+    @classmethod
+    def for_mesh(cls, mesh) -> "Axes":
+        return cls(pod="pod" if "pod" in mesh.axis_names else None)
+
+
+# --------------------------------------------------------------------- #
+# Parameter definitions
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P
+    init: str = "normal"        # normal | zeros | ones
+    scale: float | None = None  # None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.bfloat16
+
+
+def pd(shape, spec=P(), init="normal", scale=None, dtype=jnp.bfloat16):
+    return ParamDef(tuple(shape), spec, init, scale, dtype)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(defs):
+    """ParamDef tree -> ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+        is_leaf=is_param_def)
+
+
+def param_specs(defs):
+    """ParamDef tree -> PartitionSpec tree."""
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=is_param_def)
+
+
+def init_params(defs, key: jax.Array):
+    """ParamDef tree -> initialised weights (host-side, for smoke tests)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_param_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = d.scale if d.scale is not None else fan_in ** -0.5
+            out.append(
+                (jax.random.normal(k, d.shape, jnp.float32) * scale
+                 ).astype(d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_param_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+# --------------------------------------------------------------------- #
+# Architecture config
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture (exact numbers from the public pool)."""
+
+    name: str
+    family: str                 # dense | moe | ssm | vlm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # attention details
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # MLA (deepseek)
+    mla: bool = False
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2)
+    attn_every: int = 0         # shared attention block period
+    # enc-dec (whisper)
+    dec_layers: int = 0
+    dec_seq: int = 448
+    causal: bool = True
+    # sharding policy: "tp" or "spfsdp" (see DESIGN.md §5)
+    policy: str = "tp"
+    # which shape cells run (long_500k only for sub-quadratic archs)
+    supports_long: bool = False
+    has_decoder: bool = True
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.n_heads
+                               if self.n_heads else 0)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so the 'model' axis (16) divides it (DESIGN.md §6)."""
+        return -(-self.vocab // 16) * 16
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def reduced(self, **over) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            head_dim=16 if self.n_heads else None,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            kv_lora_rank=32 if self.mla else 0,
+            q_lora_rank=48 if self.mla else 0,
+            qk_rope_head_dim=8 if self.mla else 64,
+            qk_nope_head_dim=16 if self.mla else 128,
+            v_head_dim=16 if self.mla else 128,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=8,
+            attn_every=2 if self.attn_every else 0,
+            dec_layers=2 if self.dec_layers else 0,
+            dec_seq=16 if self.dec_layers else 448,
+        )
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+# --------------------------------------------------------------------- #
+# Shape cells (the assigned input-shape set)
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ArchConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """Whether (arch x shape) runs; reason recorded in EXPERIMENTS.md."""
+    if cell.name == "long_500k" and not cfg.supports_long:
+        return False, "SKIP: pure full-attention arch at 524k (sub-quadratic required)"
+    if cell.kind == "decode" and not cfg.has_decoder:
+        return False, "SKIP: encoder-only arch has no decode step"
+    return True, "ok"

@@ -1,0 +1,251 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv frontend is a STUB per the brief: ``input_specs`` provides
+precomputed frame embeddings (B, S_frames, d_model) directly.  Shapes map
+as: ``train_4k``/``prefill_32k`` put seq_len on the *encoder* frames with a
+short decoder (dec_seq tokens for train, 1 BOS for prefill); ``decode_32k``
+decodes one token with self-cache (dec_seq) + cross-attention to seq_len
+encoder states (see DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, Axes, pd
+from repro.models.layers import (decode_attention_jnp, embed,
+                                 flash_attention, gelu_mlp, layernorm,
+                                 repeat_kv, shard, sinusoidal_positions)
+from repro.models.transformer import _stack_defs, chunked_loss
+
+
+def _attn_defs(cfg: ArchConfig, axes: Axes, kv: bool = True):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    defs = {
+        "wq": pd((d, h * dh), P(axes.data, axes.model)),
+        "bq": pd((h * dh,), P(axes.model), init="zeros"),
+        "wo": pd((h * dh, d), P(axes.model, axes.data)),
+        "bo": pd((d,), P(None), init="zeros"),
+    }
+    if kv:
+        defs.update({
+            "wk": pd((d, h * dh), P(axes.data, axes.model)),
+            "wv": pd((d, h * dh), P(axes.data, axes.model)),
+            "bv": pd((h * dh,), P(axes.model), init="zeros"),
+        })
+    return defs
+
+
+def _ln(cfg, name=""):
+    return {"w": pd((cfg.d_model,), P(None), init="ones"),
+            "b": pd((cfg.d_model,), P(None), init="zeros")}
+
+
+def _mlp_defs(cfg: ArchConfig, axes: Axes):
+    return {
+        "w1": pd((cfg.d_model, cfg.d_ff), P(axes.data, axes.model)),
+        "b1": pd((cfg.d_ff,), P(axes.model), init="zeros"),
+        "w2": pd((cfg.d_ff, cfg.d_model), P(axes.model, axes.data)),
+        "b2": pd((cfg.d_model,), P(None), init="zeros"),
+    }
+
+
+def param_defs(cfg: ArchConfig, axes: Axes | None = None):
+    ax = axes or Axes()
+    enc_layer = {"ln1": _ln(cfg), "attn": _attn_defs(cfg, ax),
+                 "ln2": _ln(cfg), "mlp": _mlp_defs(cfg, ax)}
+    dec_layer = {"ln1": _ln(cfg), "self_attn": _attn_defs(cfg, ax),
+                 "ln2": _ln(cfg), "cross_attn": _attn_defs(cfg, ax),
+                 "ln3": _ln(cfg), "mlp": _mlp_defs(cfg, ax)}
+    return {
+        "enc_layers": _stack_defs(enc_layer, cfg.n_layers),
+        "enc_ln_post": _ln(cfg),
+        "embed": pd((cfg.padded_vocab, cfg.d_model), P(None, ax.model),
+                    scale=1.0),
+        "dec_layers": _stack_defs(dec_layer, cfg.dec_layers or cfg.n_layers),
+        "dec_ln_f": _ln(cfg),
+        "lm_head": pd((cfg.d_model, cfg.padded_vocab), P(ax.data, ax.model)),
+    }
+
+
+def _mha(x, kv_src, p, cfg: ArchConfig, axes: Axes | None, causal: bool):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"] + p["bq"]).reshape(b, s, h, dh)
+    k = (kv_src @ p["wk"]).reshape(b, kv_src.shape[1], h, dh)
+    v = (kv_src @ p["wv"] + p["bv"]).reshape(b, kv_src.shape[1], h, dh)
+    if axes:
+        hspec = P(axes.batch if b > 1 else None, None, axes.model, None)
+        q, k, v = shard(q, hspec), shard(k, hspec), shard(v, hspec)
+    out = flash_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, h * dh) @ p["wo"] + p["bo"], (k, v)
+
+
+def encode(params, frames, cfg: ArchConfig, axes: Axes | None,
+           remat: bool = True):
+    """frames (B, S, d) stub embeddings -> encoder states."""
+    s = frames.shape[1]
+    x = frames + sinusoidal_positions(s, cfg.d_model)[None].astype(
+        frames.dtype)
+    if axes:
+        x = shard(x, P(axes.batch, None, None))
+
+    def layer(x, lp):
+        a, _ = _mha(layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+                    layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+                    lp["attn"], cfg, axes, causal=False)
+        x = x + a
+        x = x + gelu_mlp(layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"]),
+                         lp["mlp"]["w1"], lp["mlp"]["b1"],
+                         lp["mlp"]["w2"], lp["mlp"]["b2"])
+        return x
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    def body(x, lp):
+        return layer(x, lp), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layernorm(x, params["enc_ln_post"]["w"], params["enc_ln_post"]["b"])
+
+
+def decode_train(params, enc_out, tokens, cfg: ArchConfig,
+                 axes: Axes | None, remat: bool = True):
+    """Teacher-forced decoder forward -> hidden states."""
+    b, t = tokens.shape
+    x = embed(tokens, params["embed"]) \
+        + sinusoidal_positions(t, cfg.d_model)[None].astype(jnp.bfloat16)
+
+    def layer(x, lp):
+        a, _ = _mha(layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+                    layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"]),
+                    lp["self_attn"], cfg, axes, causal=True)
+        x = x + a
+        c, _ = _mha(layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"]), enc_out,
+                    lp["cross_attn"], cfg, axes, causal=False)
+        x = x + c
+        x = x + gelu_mlp(layernorm(x, lp["ln3"]["w"], lp["ln3"]["b"]),
+                         lp["mlp"]["w1"], lp["mlp"]["b1"],
+                         lp["mlp"]["w2"], lp["mlp"]["b2"])
+        return x
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    def body(x, lp):
+        return layer(x, lp), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return layernorm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"])
+
+
+def loss_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None):
+    enc_out = encode(params, batch["frames"], cfg, axes)
+    hidden = decode_train(params, enc_out, batch["tokens"], cfg, axes)
+    return chunked_loss(hidden, params["lm_head"], batch["labels"])
+
+
+def cache_defs(cfg: ArchConfig, batch: int, enc_len: int,
+               axes: Axes | None):
+    """Cross K/V over encoder states + self K/V over dec_seq."""
+    ax = axes or Axes()
+    h, dh = cfg.n_heads, cfg.head_dim
+    batch_axis = ax.batch if axes else None
+    model_axis = ax.model if axes else None
+    one = {
+        "cross_k": pd((batch, enc_len, h, dh),
+                      P(batch_axis, None, model_axis, None), init="zeros"),
+        "cross_v": pd((batch, enc_len, h, dh),
+                      P(batch_axis, None, model_axis, None), init="zeros"),
+        "self_k": pd((batch, cfg.dec_seq, h, dh),
+                     P(batch_axis, None, model_axis, None), init="zeros"),
+        "self_v": pd((batch, cfg.dec_seq, h, dh),
+                     P(batch_axis, None, model_axis, None), init="zeros"),
+    }
+    return _stack_defs(one, cfg.dec_layers or cfg.n_layers)
+
+
+def prefill_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None,
+               max_len: int | None = None):
+    """Encode the audio; prime the decoder with one BOS token."""
+    enc_out = encode(params, batch["frames"], cfg, axes)
+    b = enc_out.shape[0]
+    bos = jnp.zeros((b, 1), jnp.int32)
+    x = embed(bos, params["embed"]) \
+        + sinusoidal_positions(1, cfg.d_model)[None].astype(jnp.bfloat16)
+
+    def body(x, lp):
+        h, dh = cfg.n_heads, cfg.head_dim
+        xin = layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        a, (sk, sv) = _mha(xin, xin, lp["self_attn"], cfg, axes, causal=True)
+        x = x + a
+        c, (ck, cv) = _mha(layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"]),
+                           enc_out, lp["cross_attn"], cfg, axes,
+                           causal=False)
+        x = x + c
+        x = x + gelu_mlp(layernorm(x, lp["ln3"]["w"], lp["ln3"]["b"]),
+                         lp["mlp"]["w1"], lp["mlp"]["b1"],
+                         lp["mlp"]["w2"], lp["mlp"]["b2"])
+        pad = cfg.dec_seq - 1
+        cache = {
+            "cross_k": ck.astype(jnp.bfloat16),
+            "cross_v": cv.astype(jnp.bfloat16),
+            "self_k": jnp.pad(sk, ((0, 0), (0, pad), (0, 0), (0, 0))
+                              ).astype(jnp.bfloat16),
+            "self_v": jnp.pad(sv, ((0, 0), (0, pad), (0, 0), (0, 0))
+                              ).astype(jnp.bfloat16),
+        }
+        return x, cache
+
+    x, cache = jax.lax.scan(body, x, params["dec_layers"])
+    x = layernorm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache
+
+
+def decode_fn(params, cache, tokens, pos, cfg: ArchConfig,
+              axes: Axes | None = None):
+    """One decoder token; cross-attends the cached encoder K/V."""
+    b = tokens.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    pos_emb = jnp.take(sinusoidal_positions(cfg.dec_seq, cfg.d_model),
+                       pos, axis=0)
+    x = embed(tokens, params["embed"]) + pos_emb[None, None].astype(
+        jnp.bfloat16)
+
+    def body(x, lc):
+        lp, c = lc
+        xin = layernorm(x, lp["ln1"]["w"], lp["ln1"]["b"])
+        q = (xin @ lp["self_attn"]["wq"]
+             + lp["self_attn"]["bq"]).reshape(b, 1, h, dh)
+        k = (xin @ lp["self_attn"]["wk"]).reshape(b, 1, h, dh)
+        v = (xin @ lp["self_attn"]["wv"]
+             + lp["self_attn"]["bv"]).reshape(b, 1, h, dh)
+        sk = jax.lax.dynamic_update_slice_in_dim(
+            c["self_k"], k.astype(c["self_k"].dtype), pos, axis=1)
+        sv = jax.lax.dynamic_update_slice_in_dim(
+            c["self_v"], v.astype(c["self_v"].dtype), pos, axis=1)
+        a = decode_attention_jnp(q[:, 0], sk, sv, pos + 1)
+        x = x + (a.reshape(b, 1, h * dh) @ lp["self_attn"]["wo"]
+                 + lp["self_attn"]["bo"])
+        # cross attention against the fixed encoder cache
+        xin2 = layernorm(x, lp["ln2"]["w"], lp["ln2"]["b"])
+        q2 = (xin2 @ lp["cross_attn"]["wq"]
+              + lp["cross_attn"]["bq"]).reshape(b, 1, h, dh)
+        ca = decode_attention_jnp(q2[:, 0], c["cross_k"], c["cross_v"],
+                                  c["cross_k"].shape[1])
+        x = x + (ca.reshape(b, 1, h * dh) @ lp["cross_attn"]["wo"]
+                 + lp["cross_attn"]["bo"])
+        x = x + gelu_mlp(layernorm(x, lp["ln3"]["w"], lp["ln3"]["b"]),
+                         lp["mlp"]["w1"], lp["mlp"]["b1"],
+                         lp["mlp"]["w2"], lp["mlp"]["b2"])
+        return x, {"cross_k": c["cross_k"], "cross_v": c["cross_v"],
+                   "self_k": sk, "self_v": sv}
+
+    x, new_cache = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = layernorm(x, params["dec_ln_f"]["w"], params["dec_ln_f"]["b"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, new_cache

@@ -1,0 +1,250 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba-2 backbone with a single
+*shared* attention+MLP block applied every ``attn_every`` layers.  The
+shared block's input is concat(hidden, initial embedding) projected back to
+d_model (the paper adds per-invocation LoRA deltas on the shared weights —
+omitted here; recorded in DESIGN.md §6).
+
+Structure: n_layers mamba blocks in ``n_layers // attn_every`` scanned
+segments; after each segment the one shared block runs.  Each *application*
+of the shared block needs its own KV cache (same weights, different
+activations)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ssm
+from repro.models.common import ArchConfig, Axes, pd
+from repro.models.layers import (decode_attention_jnp, embed,
+                                 flash_attention, repeat_kv, rmsnorm, shard,
+                                 swiglu, apply_rope)
+from repro.models.transformer import _stack_defs, chunked_loss
+
+
+def _n_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def shared_block_defs(cfg: ArchConfig, axes: Axes):
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "w_in": pd((2 * d, d), P(axes.data, axes.model)),
+        "ln_attn": pd((d,), P(None), init="ones"),
+        "wq": pd((d, h * dh), P(axes.data, axes.model)),
+        "wk": pd((d, cfg.n_kv_heads * dh), P(axes.data, axes.model)),
+        "wv": pd((d, cfg.n_kv_heads * dh), P(axes.data, axes.model)),
+        "wo": pd((h * dh, d), P(axes.model, axes.data)),
+        "ln_mlp": pd((d,), P(None), init="ones"),
+        "w_gate": pd((d, cfg.d_ff), P(axes.data, axes.model)),
+        "w_up": pd((d, cfg.d_ff), P(axes.data, axes.model)),
+        "w_down": pd((cfg.d_ff, d), P(axes.model, axes.data)),
+    }
+
+
+def param_defs(cfg: ArchConfig, axes: Axes | None = None):
+    ax = axes or Axes()
+    mamba_layer = {
+        "ln": pd((cfg.d_model,), P(None), init="ones"),
+        "mixer": ssm.ssm_param_defs(cfg, ax),
+    }
+    return {
+        "embed": pd((cfg.padded_vocab, cfg.d_model), P(None, ax.model),
+                    scale=1.0),
+        "mamba": _stack_defs(mamba_layer, cfg.n_layers),
+        "shared": shared_block_defs(cfg, ax),
+        "ln_f": pd((cfg.d_model,), P(None), init="ones"),
+        "lm_head": pd((cfg.d_model, cfg.padded_vocab), P(ax.data, ax.model)),
+    }
+
+
+def _qkv(x, p, cfg: ArchConfig, positions):
+    b, s, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, hk, dh)
+    v = (x @ p["wv"]).reshape(b, s, hk, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def shared_block(x, x0, p, cfg: ArchConfig, axes: Axes | None, positions):
+    """Full-sequence form.  Returns (out, (k, v) for caching)."""
+    xin = jnp.concatenate([x, x0], axis=-1) @ p["w_in"]
+    a_in = rmsnorm(xin, p["ln_attn"])
+    q, k, v = _qkv(a_in, p, cfg, positions)
+    if axes:
+        hspec = P(axes.batch if x.shape[0] > 1 else None, None,
+                  axes.model, None)
+        q, k, v = shard(q, hspec), shard(k, hspec), shard(v, hspec)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    out = flash_attention(q, repeat_kv(k, rep), repeat_kv(v, rep),
+                          causal=True)
+    b, s = x.shape[:2]
+    xin = xin + out.reshape(b, s, -1) @ p["wo"]
+    xin = xin + swiglu(rmsnorm(xin, p["ln_mlp"]), p["w_gate"], p["w_up"],
+                       p["w_down"])
+    return x + xin, (k, v)
+
+
+def shared_block_decode(x, x0, p, cfg: ArchConfig, axes: Axes | None,
+                        cache, pos):
+    b = x.shape[0]
+    xin = jnp.concatenate([x, x0], axis=-1) @ p["w_in"]
+    a_in = rmsnorm(xin, p["ln_attn"])
+    positions = jnp.full((b, 1), pos)
+    q, k, v = _qkv(a_in, p, cfg, positions)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    out = decode_attention_jnp(q[:, 0], repeat_kv(kc, rep),
+                               repeat_kv(vc, rep), pos + 1)
+    xin = xin + out.reshape(b, 1, -1) @ p["wo"]
+    xin = xin + swiglu(rmsnorm(xin, p["ln_mlp"]), p["w_gate"], p["w_up"],
+                       p["w_down"])
+    return x + xin, {"k": kc, "v": vc}
+
+
+def cache_defs(cfg: ArchConfig, batch: int, max_len: int,
+               axes: Axes | None):
+    ax = axes or Axes()
+    batch_axis = ax.batch if (axes and batch > 1) else None
+    seq_axis = ax.data if (axes and batch == 1) else None   # long_500k
+    from repro.models import mamba_lm
+    kv = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    attn_one = {"k": pd(kv, P(batch_axis, seq_axis,
+                              ax.model if axes else None, None),
+                        init="zeros"),
+                "v": pd(kv, P(batch_axis, seq_axis,
+                              ax.model if axes else None, None),
+                        init="zeros")}
+    return {
+        "mamba": mamba_lm.cache_defs(cfg, batch, max_len, axes),
+        "attn": _stack_defs(attn_one, _n_apps(cfg)),
+    }
+
+
+def _segments(params_mamba, cfg: ArchConfig):
+    """Static per-segment slices of the stacked mamba params."""
+    n_apps = _n_apps(cfg)
+    per = cfg.attn_every
+    return [jax.tree.map(lambda a: a[i * per:(i + 1) * per], params_mamba)
+            for i in range(n_apps)]
+
+
+def _run_segment(x, seg_params, cfg, axes, remat=True):
+    def layer(x, lp):
+        return x + ssm.ssd_forward(rmsnorm(x, lp["ln"]), lp["mixer"], cfg,
+                                   axes)
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    def body(x, lp):
+        return layer(x, lp), None
+
+    x, _ = jax.lax.scan(body, x, seg_params)
+    return x
+
+
+def backbone(params, tokens, cfg: ArchConfig, axes: Axes | None,
+             remat: bool = True):
+    tokens_p, s0 = _pad(tokens, cfg.ssm_chunk)
+    x = embed(tokens_p, params["embed"])
+    x0 = x
+    b, s = tokens_p.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    for seg in _segments(params["mamba"], cfg):
+        x = _run_segment(x, seg, cfg, axes, remat)
+        x, _ = shared_block(x, x0, params["shared"], cfg, axes, positions)
+    return rmsnorm(x, params["ln_f"])[:, :s0]
+
+
+def _pad(tokens, chunk):
+    s = tokens.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    return tokens, s
+
+
+def loss_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None):
+    hidden = backbone(params, batch["tokens"], cfg, axes)
+    return chunked_loss(hidden, params["lm_head"], batch["labels"])
+
+
+def prefill_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None,
+               max_len: int | None = None):
+    tokens, s0 = _pad(batch["tokens"], cfg.ssm_chunk)
+    b, s = tokens.shape
+    max_len = max(max_len or s0, s)
+    x = embed(tokens, params["embed"])
+    x0 = x
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    seq_mask = (jnp.arange(s)[None] < s0)
+    mamba_caches, attn_caches = [], []
+    for seg in _segments(params["mamba"], cfg):
+        def body(x, lp):
+            y, c = ssm.ssd_forward(rmsnorm(x, lp["ln"]), lp["mixer"], cfg,
+                                   axes, return_cache=True,
+                                   seq_mask=seq_mask)
+            return x + y, c
+        x, mc = jax.lax.scan(body, x, seg)
+        mamba_caches.append(mc)
+        x, (k, v) = shared_block(x, x0, params["shared"], cfg, axes,
+                                 positions)
+        pad = max_len - s
+        attn_caches.append({
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))
+                         ).astype(jnp.bfloat16),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))
+                         ).astype(jnp.bfloat16)})
+    cache = {
+        "mamba": _concat_trees(mamba_caches),
+        "attn": _stack_trees(attn_caches),
+    }
+    h = rmsnorm(x[:, s0 - 1:s0], params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", h[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache
+
+
+def _concat_trees(trees):
+    """Concat per-segment (per_seg, ...) stacked caches -> (L, ...)."""
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def decode_fn(params, cache, tokens, pos, cfg: ArchConfig,
+              axes: Axes | None = None):
+    b = tokens.shape[0]
+    x = embed(tokens, params["embed"])
+    x0 = x
+    per = cfg.attn_every
+    new_mamba, new_attn = [], []
+    for i, seg in enumerate(_segments(params["mamba"], cfg)):
+        seg_cache = jax.tree.map(lambda a: a[i * per:(i + 1) * per],
+                                 cache["mamba"])
+
+        def body(x, lc):
+            lp, c = lc
+            y, c2 = ssm.ssd_decode(rmsnorm(x, lp["ln"]), lp["mixer"], cfg,
+                                   axes, c)
+            return x + y, c2
+
+        x, mc = jax.lax.scan(body, x, (seg, seg_cache))
+        new_mamba.append(mc)
+        ac = jax.tree.map(lambda a: a[i], cache["attn"])
+        x, ac2 = shared_block_decode(x, x0, params["shared"], cfg, axes,
+                                     ac, pos)
+        new_attn.append(ac2)
+    x = rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, {"mamba": _concat_trees(new_mamba),
+                    "attn": _stack_trees(new_attn)}

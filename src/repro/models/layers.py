@@ -1,0 +1,226 @@
+"""Neural building blocks (pure JAX): norms, RoPE, memory-safe flash
+attention, GQA, MLPs, embeddings.  All functions take explicit param dicts
+(built from ParamDef trees in the model files)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def shard(x: jax.Array, spec: P | None) -> jax.Array:
+    """with_sharding_constraint that no-ops when no mesh is active (smoke
+    tests run un-meshed; the dry-run sets a mesh via jax.set_mesh)."""
+    if spec is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+    except Exception:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ----------------------------- norms ---------------------------------- #
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------- RoPE ------------------------------------ #
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10_000.0 ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+    ang = pos * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------- flash attention ----------------------------- #
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, H_kv, D) -> (B, S, H_kv*n_rep, D)."""
+    if n_rep == 1:
+        return x
+    return jnp.repeat(x, n_rep, axis=2)
+
+
+_NEG = -1e30
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    q_offset: int | jax.Array = 0,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    qr_spec: P | None = None,
+                    kv_spec: P | None = None) -> jax.Array:
+    """Memory-safe attention: outer scan over query chunks, inner scan over
+    KV chunks with online softmax (the S1 schedule of DESIGN.md §4 in pure
+    jnp, so it lowers on any backend; the Pallas `flash_decode` kernel is
+    the single-query TPU version).
+
+    q: (B, Sq, H, D); k/v: (B, Skv, H, D) (already GQA-repeated).
+    ``q_offset``: absolute position of q[0] (prefill continuation).
+    Returns (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    dv = v.shape[-1]                    # may differ from d (MLA: qk 192, v 128)
+    skv = k.shape[1]
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    # pad to multiples
+    pq = (-sq) % qc
+    pk = (-skv) % kc
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (sq + pq) // qc, (skv + pk) // kc
+    scale = d ** -0.5
+
+    qr = q.reshape(b, nq, qc, h, d).transpose(1, 0, 3, 2, 4)   # (nq,B,H,qc,D)
+    kr = k.reshape(b, nk, kc, h, d).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kc, h, dv).transpose(1, 0, 3, 2, 4)
+    # qr_spec shards *within* each scanned query chunk (e.g. rows of qc on
+    # the model axis for odd-head-count archs): scan iterations are
+    # sequential, so intra-chunk sharding is the only way the model axis
+    # can divide attention compute when heads cannot.  kv_spec pins the
+    # scanned K/V stacks (left ambiguous, the partitioner was observed to
+    # all-gather the FULL stack inside the inner scan body every
+    # iteration — 939 MB x nq x nk x L on qwen2-7b prefill).
+    qr = shard(qr, qr_spec)
+    kr = shard(kr, kv_spec)
+    vr = shard(vr, kv_spec)
+
+    def q_block(carry, qi_q):
+        qi, qb = qi_q                                   # qb: (B,H,qc,D)
+        qpos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_block(state, ki_kv):
+            m, l, acc = state
+            ki, kb, vb = ki_kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            kpos = ki * kc + jnp.arange(kc)
+            mask = kpos[None, :] < skv                  # padding
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            s = jnp.where(mask[None, None], s, _NEG)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, qc, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, qc, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, qc, dv), jnp.float32)
+        # checkpoint each KV block: backward recomputes the (qc, kc) score
+        # tile instead of saving every probability matrix — the flash
+        # memory property under plain jax AD.
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_block), (m0, l0, a0),
+            (jnp.arange(nk), kr, vr))
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)  # (B,H,qc,Dv)
+        return carry, out
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qr))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * qc, h, dv)
+    return out[:, :sq]
+
+
+def decode_attention_jnp(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, length: jax.Array,
+                         ) -> jax.Array:
+    """Single-token attention over a padded cache (pure jnp path used by the
+    distributed serve_step; cache S may be sharded — softmax reductions
+    become collectives under GSPMD).
+
+    q: (B, H, D); caches: (B, S, H, D) GQA-repeated; length: (B,) or scalar.
+    """
+    b, h, d = q.shape
+    s = k_cache.shape[1]
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * (d ** -0.5)
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(length, (-1, 1))
+    scores = jnp.where(valid[:, None, :], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------ MLPs ----------------------------------- #
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array, ff_spec: P | None = None) -> jax.Array:
+    g = shard(x @ w_gate, ff_spec)
+    u = shard(x @ w_up, ff_spec)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+def gelu_mlp(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+             b2: jax.Array, ff_spec: P | None = None) -> jax.Array:
+    h = shard(x @ w1 + b1, ff_spec)
+    return jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype) @ w2 + b2
+
+
+# --------------------------- embeddings -------------------------------- #
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits in f32 (loss numerics)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1) -> jax.Array:
+    """Mean next-token CE over valid labels; logits (..., V) f32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0),
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels != ignore_id).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)

@@ -1,0 +1,125 @@
+"""Pure Mamba-2 LM (mamba2-2.7b): embed -> scanned SSD layers -> head.
+
+Attention-free: the serve cache is the (state, conv-tail) pair per layer —
+O(1) in sequence length, which is why this arch (and the zamba2 hybrid)
+carries the long_500k cell."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import ssm
+from repro.models.common import ArchConfig, Axes, pd
+from repro.models.layers import embed, rmsnorm, shard
+from repro.models.transformer import _stack_defs, chunked_loss
+
+
+def param_defs(cfg: ArchConfig, axes: Axes | None = None):
+    ax = axes or Axes()
+    layer = {
+        "ln": pd((cfg.d_model,), P(None), init="ones"),
+        "mixer": ssm.ssm_param_defs(cfg, ax),
+    }
+    return {
+        "embed": pd((cfg.padded_vocab, cfg.d_model), P(None, ax.model),
+                    scale=1.0),
+        "layers": _stack_defs(layer, cfg.n_layers),
+        "ln_f": pd((cfg.d_model,), P(None), init="ones"),
+        "lm_head": pd((cfg.d_model, cfg.padded_vocab),
+                      P(ax.data, ax.model)),
+    }
+
+
+def cache_defs(cfg: ArchConfig, batch: int, max_len: int,
+               axes: Axes | None):
+    ax = axes or Axes()
+    batch_axis = ax.batch if (axes and batch > 1) else None
+    one = {
+        "h": pd((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                P(batch_axis, ax.model if axes else None, None, None),
+                init="zeros", dtype=jnp.float32),
+        "conv": pd((batch, cfg.ssm_conv_width - 1,
+                    cfg.d_inner + 2 * cfg.ssm_state),
+                   P(batch_axis, None, ax.model if axes else None),
+                   init="zeros"),
+    }
+    return _stack_defs(one, cfg.n_layers)
+
+
+def _pad_seq(x, chunk):
+    s = x.shape[1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, s
+
+
+def backbone(params, tokens, cfg: ArchConfig, axes: Axes | None,
+             remat: bool = True):
+    tokens, s0 = _pad_seq(tokens, cfg.ssm_chunk)
+    x = embed(tokens, params["embed"])
+    if axes:
+        x = shard(x, P(axes.batch, None, None))
+
+    def layer(x, lp):
+        return x + ssm.ssd_forward(rmsnorm(x, lp["ln"]), lp["mixer"], cfg,
+                                   axes)
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    def body(x, lp):
+        y = layer(x, lp)
+        if axes:
+            y = shard(y, P(axes.batch, None, None))
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return rmsnorm(x, params["ln_f"])[:, :s0]
+
+
+def loss_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None):
+    hidden = backbone(params, batch["tokens"], cfg, axes)
+    return chunked_loss(hidden, params["lm_head"], batch["labels"])
+
+
+def prefill_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None,
+               max_len: int | None = None):
+    tokens, s0 = _pad_seq(batch["tokens"], cfg.ssm_chunk)
+    x = embed(tokens, params["embed"])
+    if axes:
+        x = shard(x, P(axes.batch, None, None))
+    seq_mask = (jnp.arange(tokens.shape[1])[None] < s0)
+
+    def body(x, lp):
+        y, cache = ssm.ssd_forward(rmsnorm(x, lp["ln"]), lp["mixer"], cfg,
+                                   axes, return_cache=True,
+                                   seq_mask=seq_mask)
+        return x + y, cache
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x[:, s0 - 1:s0], params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache
+
+
+def decode_fn(params, cache, tokens, pos, cfg: ArchConfig,
+              axes: Axes | None = None):
+    del pos                                     # stateless in position
+    x = embed(tokens, params["embed"])
+
+    def body(x, lc):
+        lp, c = lc
+        y, c2 = ssm.ssd_decode(rmsnorm(x, lp["ln"]), lp["mixer"], cfg,
+                               axes, c)
+        return x + y, c2
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, new_cache

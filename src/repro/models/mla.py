@@ -1,0 +1,166 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Two execution forms:
+  * train/prefill — decompress the latent to full per-head K/V and run flash
+    attention (compute-optimal when S tokens amortise the decompression);
+  * decode — *absorbed* form: queries are pulled into the latent space
+    (q_nope @ W_UK), attention runs directly against the compressed cache
+    c_kv (kv_lora_rank + rope dims per token), and the context is expanded
+    back with W_UV.  The KV cache is therefore 576 B/token instead of
+    ~40 KiB/token — this is what makes decode_32k x batch 128 fit at all.
+
+In the paper's terms the compressed cache is the input tensor in DRAM; the
+absorbed decode streams it once per step (S1 with Q resident), which is also
+exactly what `kernels/flash_decode` implements on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, Axes, pd
+from repro.models.layers import apply_rope, flash_attention, rmsnorm, shard
+
+_NEG = -1e30
+
+
+def mla_param_defs(cfg: ArchConfig, axes: Axes):
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wq_a": pd((d, cfg.q_lora_rank), P(axes.data, None)),
+        "q_norm": pd((cfg.q_lora_rank,), P(None), init="ones"),
+        "wq_b": pd((cfg.q_lora_rank, h * qk), P(axes.data, axes.model)),
+        "wkv_a": pd((d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                    P(axes.data, None)),
+        "kv_norm": pd((cfg.kv_lora_rank,), P(None), init="ones"),
+        "wkv_b": pd((cfg.kv_lora_rank,
+                     h * (cfg.qk_nope_head_dim + cfg.v_head_dim)),
+                    P(axes.data, axes.model)),
+        "wo": pd((h * cfg.v_head_dim, d), P(axes.model, axes.data)),
+    }
+
+
+def _project_q(x, p, cfg: ArchConfig, positions):
+    """x (B,S,d) -> q_nope (B,S,H,nope), q_pe (B,S,H,rope)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq = rmsnorm(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(
+        b, s, h, cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_nope, q_pe = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_attention(x: jax.Array, p, cfg: ArchConfig, axes: Axes | None,
+                  positions: jax.Array) -> jax.Array:
+    """Train/prefill form (decompressed K/V + flash attention)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q_nope, q_pe = _project_q(x, p, cfg, positions)
+
+    kv_a = x @ p["wkv_a"]                                  # (B,S,lora+rope)
+    c_kv, k_pe = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)
+    kv = rmsnorm(c_kv, p["kv_norm"]) @ p["wkv_b"]
+    if axes:
+        # pin head-sharding on the flat (H * (nope+v)) dim BEFORE the
+        # reshape — the decompressed K/V is the big MLA prefill tensor.
+        kv = shard(kv, P(axes.batch, None, axes.model))
+    kv = kv.reshape(b, s, h, cfg.qk_nope_head_dim + cfg.v_head_dim)
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
+
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe, (b, s, h, cfg.qk_rope_head_dim))],
+        axis=-1)
+    if axes:
+        hspec = P(axes.batch, None, axes.model, None)
+        q, k, v = shard(q, hspec), shard(k, hspec), shard(v, hspec)
+    out = flash_attention(q, k, v, causal=True)            # (B,S,H,v_dim)
+    return out.reshape(b, s, h * cfg.v_head_dim) @ p["wo"]
+
+
+def mla_init_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    """Compressed cache: c_kv (B,S,lora) + roped k_pe (B,S,rope)."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_cache_specs(cfg: ArchConfig, axes: Axes, shard_seq: bool):
+    seq = axes.model if shard_seq else None
+    return {"c_kv": P(axes.batch if not shard_seq else None, seq, None),
+            "k_pe": P(axes.batch if not shard_seq else None, seq, None)}
+
+
+def mla_prefill_cache(x, p, cfg: ArchConfig, positions, max_len: int):
+    """Compute the compressed cache entries for a prompt."""
+    kv_a = x @ p["wkv_a"]
+    c_kv, k_pe = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions,
+                      cfg.rope_theta)[:, :, 0, :]
+    pad = max_len - x.shape[1]
+    return {
+        "c_kv": jnp.pad(rmsnorm(c_kv, p["kv_norm"]),
+                        ((0, 0), (0, pad), (0, 0))).astype(jnp.bfloat16),
+        "k_pe": jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0))
+                        ).astype(jnp.bfloat16),
+    }
+
+
+def mla_decode(x: jax.Array, p, cfg: ArchConfig, axes: Axes | None,
+               cache: dict, pos: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed single-token decode against the compressed cache.
+
+    x: (B, 1, d); cache c_kv (B, S, lora), k_pe (B, S, rope); pos: scalar
+    current position.  Returns (out (B,1,d), updated cache).
+    """
+    b, _, d = x.shape
+    h = cfg.n_heads
+    nope, rope, dv = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                      cfg.v_head_dim)
+    positions = jnp.full((b, 1), pos)
+    q_nope, q_pe = _project_q(x, p, cfg, positions)        # (B,1,H,*)
+    q_nope, q_pe = q_nope[:, 0], q_pe[:, 0]                # (B,H,*)
+
+    # new cache entry
+    kv_a = x[:, 0] @ p["wkv_a"]                            # (B, lora+rope)
+    c_new, kpe_new = jnp.split(kv_a, [cfg.kv_lora_rank], axis=-1)
+    c_new = rmsnorm(c_new, p["kv_norm"])
+    kpe_new = apply_rope(kpe_new[:, None, None, :], positions,
+                         cfg.rope_theta)[:, 0, 0]
+    cache = {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_new[:, None].astype(cache["c_kv"].dtype), pos,
+            axis=1),
+        "k_pe": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_pe"], kpe_new[:, None].astype(cache["k_pe"].dtype),
+            pos, axis=1),
+    }
+
+    # absorb: q into latent space (per head)
+    w_kv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, h, nope + dv)
+    w_uk = w_kv_b[:, :, :nope]                             # (lora, H, nope)
+    w_uv = w_kv_b[:, :, nope:]                             # (lora, H, dv)
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))           # (B,H,lora)
+
+    scale = (nope + rope) ** -0.5
+    s_lat = jnp.einsum("bhl,bsl->bhs", q_lat,
+                       cache["c_kv"].astype(jnp.float32))
+    s_pe = jnp.einsum("bhr,bsr->bhs", q_pe.astype(jnp.float32),
+                      cache["k_pe"].astype(jnp.float32))
+    scores = (s_lat + s_pe) * scale                        # (B,H,S)
+    valid = jnp.arange(scores.shape[-1])[None, None, :] <= pos
+    scores = jnp.where(valid, scores, _NEG)
+    pr = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhs,bsl->bhl", pr,
+                         cache["c_kv"].astype(jnp.float32))
+    ctx = jnp.einsum("bhl,lhv->bhv", ctx_lat, w_uv.astype(jnp.float32))
+    out = ctx.reshape(b, 1 * h * dv).astype(x.dtype)[:, None, :]
+    return out.reshape(b, 1, h * dv) @ p["wo"], cache

@@ -1,0 +1,183 @@
+"""Architecture registry: ``--arch <id>`` -> config + model API + input
+specs for every shape cell."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import encdec, hybrid, mamba_lm, transformer
+from repro.models.common import (ArchConfig, Axes, ShapeCell, SHAPES,
+                                 abstract_params, cell_applicable,
+                                 init_params, param_specs)
+
+_ARCH_MODULES = {
+    "deepseek-v2-236b": ("repro.configs.deepseek_v2_236b", transformer),
+    "dbrx-132b": ("repro.configs.dbrx_132b", transformer),
+    "qwen2.5-32b": ("repro.configs.qwen2_5_32b", transformer),
+    "tinyllama-1.1b": ("repro.configs.tinyllama_1_1b", transformer),
+    "qwen2-7b": ("repro.configs.qwen2_7b", transformer),
+    "qwen2.5-14b": ("repro.configs.qwen2_5_14b", transformer),
+    "mamba2-2.7b": ("repro.configs.mamba2_2_7b", mamba_lm),
+    "chameleon-34b": ("repro.configs.chameleon_34b", transformer),
+    "zamba2-2.7b": ("repro.configs.zamba2_2_7b", hybrid),
+    "whisper-medium": ("repro.configs.whisper_medium", encdec),
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    """Uniform handle over one architecture."""
+
+    cfg: ArchConfig
+    module: Any
+
+    # ---- parameters ----------------------------------------------------
+    def param_defs(self, axes: Axes | None = None):
+        return self.module.param_defs(self.cfg, axes)
+
+    def abstract_params(self, axes: Axes | None = None):
+        return abstract_params(self.param_defs(axes))
+
+    # NOTE (§Perf iteration 10, refuted): replicating small archs' weights
+    # over the data axis to remove FSDP gathers was tried — measured only
+    # 3–5% off the collective term (the dominant weight traffic is
+    # all-gathers over the *model* axis: sequence-parallel shards each need
+    # the full weights, independent of storage sharding) at +1 GB peak.
+    # Reverted; storage stays (data x model).
+
+    def param_specs(self, axes: Axes, layout: str = "train"):
+        """PartitionSpec tree.  layout="decode" for spfsdp archs swaps every
+        2-D weight to P(model-on-contraction, None): row-parallel decode —
+        per-token weight reads are shard-local instead of FSDP-gathered
+        (EXPERIMENTS.md §Perf iteration 3)."""
+        specs = param_specs(self.param_defs(axes))
+        if layout != "decode" or self.cfg.policy != "spfsdp":
+            return specs
+        from jax.sharding import PartitionSpec as P
+        defs = self.param_defs(axes)
+        import jax
+        from repro.models.common import is_param_def
+
+        def flip(d):
+            nd = len(d.shape)
+            if nd >= 2 and d.shape[-1] > 1 and d.shape[-2] > 256:
+                # 2-D weight (possibly layer-stacked): model on the
+                # contraction (second-to-last) dim, replicated elsewhere.
+                return P(*((None,) * (nd - 2)), axes.model, None)
+            return P(*((None,) * nd))
+
+        flipped = jax.tree.map(flip, defs, is_leaf=is_param_def)
+        # keep the embedding gather layout (vocab lookups, not matmul)
+        if isinstance(flipped, dict) and "embed" in flipped:
+            flipped["embed"] = param_specs(defs)["embed"] \
+                if not isinstance(defs["embed"], dict) else flipped["embed"]
+        return flipped
+
+    def zero1_specs(self, axes: Axes):
+        """Full (data x model) storage specs for optimizer state / grad
+        accumulators — independent of the small-arch weight replication."""
+        return param_specs(self.param_defs(axes))
+
+    def init_params(self, key, axes: Axes | None = None):
+        return init_params(self.param_defs(axes), key)
+
+    # ---- step functions -------------------------------------------------
+    def loss_fn(self, params, batch, axes: Axes | None = None):
+        return self.module.loss_fn(params, batch, self.cfg, axes)
+
+    def prefill_fn(self, params, batch, axes: Axes | None = None,
+                   max_len: int | None = None):
+        return self.module.prefill_fn(params, batch, self.cfg, axes,
+                                      max_len=max_len)
+
+    def decode_fn(self, params, cache, tokens, pos,
+                  axes: Axes | None = None):
+        return self.module.decode_fn(params, cache, tokens, pos, self.cfg,
+                                     axes)
+
+    # ---- caches ----------------------------------------------------------
+    def cache_defs(self, batch: int, max_len: int, axes: Axes | None):
+        return self.module.cache_defs(self.cfg, batch, max_len, axes)
+
+    # ---- dry-run inputs ---------------------------------------------------
+    def input_specs(self, cell: ShapeCell, axes: Axes | None = None):
+        """ShapeDtypeStruct stand-ins + PartitionSpecs for one shape cell.
+
+        Returns (abstract_inputs: dict, partition_specs: dict).  Decode
+        cells include the abstract cache under key "cache"."""
+        cfg = self.cfg
+        b, s = cell.global_batch, cell.seq_len
+        batch_axis = (axes.batch if axes and b > 1 else None)
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        tok_spec = P(batch_axis, None)
+
+        if cell.kind == "train":
+            if cfg.family == "audio":
+                inputs = {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((b, cfg.dec_seq),
+                                                   jnp.int32),
+                    "labels": jax.ShapeDtypeStruct((b, cfg.dec_seq),
+                                                   jnp.int32),
+                }
+                specs = {"frames": P(batch_axis, None, None),
+                         "tokens": tok_spec, "labels": tok_spec}
+            else:
+                inputs = {"tokens": tok, "labels": tok}
+                specs = {"tokens": tok_spec, "labels": tok_spec}
+            return inputs, specs
+
+        if cell.kind == "prefill":
+            if cfg.family == "audio":
+                inputs = {"frames": jax.ShapeDtypeStruct(
+                    (b, s, cfg.d_model), jnp.bfloat16)}
+                specs = {"frames": P(batch_axis, None, None)}
+            else:
+                inputs = {"tokens": tok}
+                specs = {"tokens": tok_spec}
+            return inputs, specs
+
+        # decode: one new token against a seq_len cache
+        cache_d = self.cache_defs(b, s, axes)
+        inputs = {
+            "cache": abstract_params(cache_d),
+            "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {
+            "cache": param_specs(cache_d),
+            "tokens": P(batch_axis, None),
+            "pos": P(),
+        }
+        return inputs, specs
+
+    def applicable_cells(self):
+        out = []
+        for cell in SHAPES.values():
+            ok, why = cell_applicable(self.cfg, cell)
+            out.append((cell, ok, why))
+        return out
+
+
+@functools.lru_cache(maxsize=None)
+def get(arch_id: str) -> ModelApi:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; have {ARCH_IDS}")
+    cfg_mod, model_mod = _ARCH_MODULES[arch_id]
+    cfg = importlib.import_module(cfg_mod).CONFIG
+    return ModelApi(cfg=cfg, module=model_mod)
+
+
+def get_reduced(arch_id: str, **over) -> ModelApi:
+    """Reduced same-family config for CPU smoke tests."""
+    api = get(arch_id)
+    return ModelApi(cfg=api.cfg.reduced(**over), module=api.module)

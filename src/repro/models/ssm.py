@@ -1,0 +1,197 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: the sequence is cut into
+chunks of Q tokens; within a chunk the computation is a masked quadratic
+form (runs on the MXU), across chunks a small state (H, P, N) is carried by
+an associative scan.  Note the paper-mapping (DESIGN.md §4): the chunk size
+is a *step size* in the offloading formalism — each chunk's inputs are one
+I_slice, the carried state is the "kept in on-chip memory" set, and
+``core.planner`` reasoning applies to choosing Q.
+
+Decode is the O(1) recurrent form: h <- exp(dt A) h + dt B x, carried in the
+serve cache together with the causal-conv tail window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ArchConfig, Axes, pd
+from repro.models.layers import rmsnorm, shard
+
+
+def ssm_param_defs(cfg: ArchConfig, axes: Axes):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n                     # x, B, C convolved jointly
+    proj_out = 2 * di + 2 * n + h             # z, x, B, C, dt
+    return {
+        "in_proj": pd((d, proj_out), P(axes.data, axes.model)),
+        "conv_w": pd((cfg.ssm_conv_width, conv_dim), P(None, axes.model),
+                     scale=0.5),
+        "conv_b": pd((conv_dim,), P(axes.model), init="zeros"),
+        "a_log": pd((h,), P(axes.model), init="ones", dtype=jnp.float32),
+        "d_skip": pd((h,), P(axes.model), init="ones", dtype=jnp.float32),
+        "dt_bias": pd((h,), P(axes.model), init="zeros", dtype=jnp.float32),
+        "norm_w": pd((di,), P(axes.model), init="ones"),
+        "out_proj": pd((di, d), P(axes.model, axes.data)),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along S.  xbc (B, S, C); w (W, C).
+    Returns (out, new_state) where state is the trailing W-1 window."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)            # (B, S+W-1, C)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i][None, None]
+              for i in range(width))
+    out = jax.nn.silu((out + b[None, None]).astype(jnp.float32)
+                      ).astype(xbc.dtype)
+    new_state = full[:, -(width - 1):] if width > 1 else pad
+    return out, new_state
+
+
+def ssd_forward(x: jax.Array, p, cfg: ArchConfig, axes: Axes | None,
+                cache: dict | None = None, return_cache: bool = False,
+                seq_mask: jax.Array | None = None):
+    """Chunked SSD.  x (B, S, d) -> (B, S, d) [, final cache].
+    S % chunk == 0 (launch layer pads).  ``cache`` streams a previous
+    segment's final state in (prefill continuation).  ``seq_mask`` (B, S)
+    zeroes dt at pad positions so they do not disturb the carried state."""
+    b, s, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                  cache["conv"] if cache else None)
+    xi = xbc[..., :di].reshape(b, s, h, pdim)
+    bmat = xbc[..., di:di + n]                              # (B,S,N) 1 group
+    cmat = xbc[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])        # (B,S,H)
+    if seq_mask is not None:
+        dt = dt * seq_mask[:, :, None].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])                                # (H,)
+    da = dt * a[None, None]                                 # (B,S,H)
+
+    # chunk
+    xi = xi.reshape(b, nc, q, h, pdim)
+    bm = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cm = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    dt_c = dt.reshape(b, nc, q, h)
+    da_c = da.reshape(b, nc, q, h)
+    da_cs = jnp.cumsum(da_c, axis=2)                        # (B,nc,Q,H)
+
+    if axes:
+        xi = shard(xi, P(axes.batch, None, None, axes.model, None))
+
+    # --- intra-chunk (quadratic, causal-masked) -------------------------
+    # decay L[q1, q2] = exp(da_cs[q1] - da_cs[q2]) for q1 >= q2
+    ldec = jnp.exp(da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    ldec = jnp.where(causal[None, None, :, :, None], ldec, 0.0)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cm, bm)          # (B,nc,Q,Q)
+    w = scores[..., None] * ldec * dt_c[:, :, None, :, :]   # (B,nc,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w,
+                         xi.astype(jnp.float32))
+
+    # --- chunk states + inter-chunk scan --------------------------------
+    seg_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)          # decay to chunk end
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn",
+                        bm, (dt_c * seg_end).astype(jnp.float32),
+                        xi.astype(jnp.float32))             # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])               # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        st, dec = inp                                       # (B,H,P,N),(B,H)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    h0 = cache["h"] if cache else jnp.zeros((b, h, pdim, n), jnp.float32)
+    h_final, h_before = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cm, h_before,
+                         jnp.exp(da_cs))
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    y = y + xi.reshape(b, s, h, pdim).astype(jnp.float32) \
+        * p["d_skip"][None, None, :, None]
+
+    # gated RMSNorm + out projection
+    y = y.reshape(b, s, di).astype(x.dtype)
+    z = jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y * z, p["norm_w"])
+    if axes:
+        y = shard(y, P(axes.batch, None, axes.model))
+    out = y @ p["out_proj"]
+    if return_cache:
+        return out, {"h": h_final, "conv": conv_tail.astype(jnp.bfloat16)}
+    return out
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                           cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def ssm_cache_specs(cfg: ArchConfig, axes: Axes):
+    return {"h": P(axes.batch, axes.model, None, None),
+            "conv": P(axes.batch, None, axes.model)}
+
+
+def ssd_decode(x: jax.Array, p, cfg: ArchConfig, axes: Axes | None,
+               cache: dict) -> tuple[jax.Array, dict]:
+    """Recurrent single-token step.  x (B, 1, d)."""
+    b = x.shape[0]
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+        cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["in_proj"]                         # (B, proj)
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+
+    # conv update with cached tail window
+    win = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)
+    conv_out = (win * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xi = xbc[:, :di].reshape(b, h, pdim)
+    bm = xbc[:, di:di + n].astype(jnp.float32)              # (B,N)
+    cm = xbc[:, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None])
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a[None])                             # (B,H)
+
+    hstate = cache["h"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xi.astype(jnp.float32), bm)
+    y = jnp.einsum("bn,bhpn->bhp", cm, hstate) \
+        + xi.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    z = jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y * z, p["norm_w"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"h": hstate, "conv": new_conv}

@@ -1,0 +1,404 @@
+"""Decoder-only LM covering the dense / moe / mla / vlm-backbone families.
+
+Layout & distribution (DESIGN.md §5):
+  * every 2-D weight is stored P(data, model) — "model" carries the TP dim
+    (flattened head dim, d_ff, vocab, experts), "data" is ZeRO/FSDP storage
+    sharding that GSPMD gathers at use inside the layer scan;
+  * activations get with_sharding_constraint steering per policy:
+      - policy "tp":      batch on ("pod","data"), heads/d_ff on "model";
+      - policy "spfsdp":  sequence on "model" (odd head counts — Qwen), see
+        DESIGN.md §5;
+  * layers are stacked and scanned (jax.lax.scan) with per-layer remat —
+    one layer of HLO regardless of depth (compile-time at 512 devices, and
+    the right call at 1000+ nodes too);
+  * the LM loss is computed in sequence chunks so the (B,S,V) logits tensor
+    never materialises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.common import (ArchConfig, Axes, ParamDef, abstract_params,
+                                 init_params, is_param_def, param_specs, pd)
+from repro.models.layers import (apply_rope, cross_entropy,
+                                 decode_attention_jnp, embed, flash_attention,
+                                 repeat_kv, rmsnorm, shard, swiglu)
+
+
+# --------------------------------------------------------------------- #
+# Parameter definitions
+# --------------------------------------------------------------------- #
+
+def attn_param_defs(cfg: ArchConfig, axes: Axes):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": pd((d, h * dh), P(axes.data, axes.model)),
+        "wk": pd((d, hk * dh), P(axes.data, axes.model)),
+        "wv": pd((d, hk * dh), P(axes.data, axes.model)),
+        "wo": pd((h * dh, d), P(axes.model, axes.data)),
+    }
+    if cfg.qkv_bias:
+        defs.update({
+            "bq": pd((h * dh,), P(axes.model), init="zeros"),
+            "bk": pd((hk * dh,), P(axes.model), init="zeros"),
+            "bv": pd((hk * dh,), P(axes.model), init="zeros"),
+        })
+    if cfg.qk_norm:
+        defs.update({
+            "q_norm": pd((dh,), P(None), init="ones"),
+            "k_norm": pd((dh,), P(None), init="ones"),
+        })
+    return defs
+
+
+def mlp_param_defs(cfg: ArchConfig, axes: Axes):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": pd((d, f), P(axes.data, axes.model)),
+        "w_up": pd((d, f), P(axes.data, axes.model)),
+        "w_down": pd((f, d), P(axes.model, axes.data)),
+    }
+
+
+def layer_param_defs(cfg: ArchConfig, axes: Axes):
+    defs: dict[str, Any] = {
+        "ln_attn": pd((cfg.d_model,), P(None), init="ones"),
+        "ln_mlp": pd((cfg.d_model,), P(None), init="ones"),
+    }
+    defs["attn"] = (mla_mod.mla_param_defs(cfg, axes) if cfg.mla
+                    else attn_param_defs(cfg, axes))
+    defs["ffn"] = (moe_mod.moe_param_defs(cfg, axes) if cfg.n_experts
+                   else mlp_param_defs(cfg, axes))
+    return defs
+
+
+def _stack_defs(defs, n: int):
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      spec=P(None, *d.spec)),
+        defs, is_leaf=is_param_def)
+
+
+def param_defs(cfg: ArchConfig, axes: Axes | None = None):
+    ax = axes or Axes()
+    v, d = cfg.padded_vocab, cfg.d_model
+    return {
+        "embed": pd((v, d), P(None, ax.model), scale=1.0),
+        "layers": _stack_defs(layer_param_defs(cfg, ax), cfg.n_layers),
+        "ln_f": pd((d,), P(None), init="ones"),
+        "lm_head": pd((d, v), P(ax.data, ax.model)),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Blocks
+# --------------------------------------------------------------------- #
+
+def gqa_attention(x, p, cfg: ArchConfig, axes: Axes | None, positions,
+                  q_offset=0):
+    """Full-sequence GQA attention (train / prefill)."""
+    b, s, d = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hk, dh)
+    v = v.reshape(b, s, hk, dh)
+    if cfg.qk_norm:
+        q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_raw, v_raw = k, v                          # pre-repeat (cache layout)
+    k, v = repeat_kv(k, h // hk), repeat_kv(v, h // hk)
+    qr_spec = kv_spec = None
+    if axes and cfg.policy == "tp":
+        hspec = P(axes.batch, None, axes.model, None)
+        q, k, v = shard(q, hspec), shard(k, hspec), shard(v, hspec)
+    elif axes:                                   # spfsdp: sequence parallel
+        sspec = P(axes.batch, axes.model, None, None)
+        q = shard(q, sspec)
+        # odd head counts: divide the model axis within each query chunk;
+        # K/V stacks stay batch-sharded, replicated over model.
+        qr_spec = P(None, axes.batch, None, axes.model, None)
+        kv_spec = P(None, axes.batch, None, None, None)
+    out = flash_attention(q, k, v, causal=cfg.causal, q_offset=q_offset,
+                          qr_spec=qr_spec, kv_spec=kv_spec)
+    return out.reshape(b, s, h * dh) @ p["wo"], (k_raw, v_raw)
+
+
+def gqa_decode(x, p, cfg: ArchConfig, axes: Axes | None, cache, pos):
+    """One-token GQA attention against the cache.  x (B,1,d)."""
+    b = x.shape[0]
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((b, 1), pos)
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, 1, h, dh)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, 1, hk, dh)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, 1, hk, dh)
+    if cfg.qk_norm:
+        q, k = rmsnorm(q, p["q_norm"]), rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+    k_full = repeat_kv(kc, h // hk)
+    v_full = repeat_kv(vc, h // hk)
+    out = decode_attention_jnp(q[:, 0], k_full, v_full, pos + 1)
+    return (out.reshape(b, 1, h * dh) @ p["wo"]), {"k": kc, "v": vc}
+
+
+def ffn_block(x, p, cfg: ArchConfig, axes: Axes | None):
+    if cfg.n_experts:
+        return moe_mod.moe_ffn(x, p, cfg, axes)
+    if axes is None:
+        ff_spec = None
+    elif cfg.policy == "tp":
+        ff_spec = P(axes.batch, None, axes.model)      # d_ff on model
+    else:                                              # spfsdp: seq on model
+        ff_spec = P(axes.batch, axes.model, None)
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"], ff_spec)
+
+
+def decoder_layer(x, p, cfg: ArchConfig, axes: Axes | None, positions):
+    xspec = _x_spec(cfg, axes)
+    if cfg.mla:
+        a = mla_mod.mla_attention(rmsnorm(x, p["ln_attn"]), p["attn"], cfg,
+                                  axes, positions)
+    else:
+        a, _ = gqa_attention(rmsnorm(x, p["ln_attn"]), p["attn"], cfg, axes,
+                             positions)
+    # keep the residual stream pinned (spfsdp: sequence on "model" — without
+    # this the FFN/attention compute replicates 16x across the model axis).
+    x = shard(x + a, xspec)
+    x = shard(x + ffn_block(rmsnorm(x, p["ln_mlp"]), p["ffn"], cfg, axes),
+              xspec)
+    return x
+
+
+# --------------------------------------------------------------------- #
+# Forward passes
+# --------------------------------------------------------------------- #
+
+def _x_spec(cfg: ArchConfig, axes: Axes | None):
+    if axes is None:
+        return None
+    if cfg.policy == "spfsdp":
+        return P(axes.batch, axes.model, None)
+    return P(axes.batch, None, None)
+
+
+def _best_group(n: int) -> int:
+    """Divisor G of n minimising G + n/G (sqrt-L two-level remat)."""
+    best = 1
+    for g in range(1, n + 1):
+        if n % g == 0 and g + n // g < best + n // best:
+            best = g
+    return best
+
+
+def two_level_scan(layer_fn, x, stacked_params, n_layers: int,
+                   constrain=None):
+    """sqrt(L) activation checkpointing: outer remat over G groups, inner
+    remat per layer.  Remat-saved layer inputs drop from L to G + L/G at
+    the price of one extra forward recompute in the backward pass
+    (EXPERIMENTS.md §Perf discusses the trade)."""
+    g = _best_group(n_layers)
+    per = n_layers // g
+    params2 = jax.tree.map(
+        lambda a: a.reshape((g, per) + a.shape[1:]), stacked_params)
+    inner_layer = jax.checkpoint(layer_fn)
+
+    def group(x, gp):
+        def body(x, lp):
+            y = inner_layer(x, lp)
+            if constrain is not None:
+                y = constrain(y)
+            return y, None
+        y, _ = jax.lax.scan(body, x, gp)
+        return y
+
+    group = jax.checkpoint(group)
+
+    def outer(x, gp):
+        return group(x, gp), None
+
+    y, _ = jax.lax.scan(outer, x, params2)
+    return y
+
+
+def backbone(params, tokens, cfg: ArchConfig, axes: Axes | None,
+             remat: bool = True):
+    """tokens (B, S) -> hidden (B, S, d), after final norm."""
+    b, s = tokens.shape
+    x = embed(tokens, params["embed"])
+    x = shard(x, _x_spec(cfg, axes))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    layer = functools.partial(decoder_layer, cfg=cfg, axes=axes,
+                              positions=positions)
+    if remat:
+        x = two_level_scan(layer, x, params["layers"], cfg.n_layers,
+                           constrain=lambda y: shard(y, _x_spec(cfg, axes)))
+    else:
+        def body(x, lp):
+            return shard(layer(x, lp), _x_spec(cfg, axes)), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    return rmsnorm(x, params["ln_f"])
+
+
+def chunked_loss(hidden, lm_head, labels, chunk: int = 512):
+    """CE without materialising (B, S, V): scan over sequence chunks."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // c
+    hs = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, c).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        h, lab = inp
+        logits = jnp.einsum("bcd,dv->bcv", h.astype(jnp.float32),
+                            lm_head.astype(jnp.float32))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None].clip(0),
+                                   axis=-1)[..., 0]
+        valid = (lab != -1).astype(jnp.float32)
+        return (acc[0] + ((logz - gold) * valid).sum(),
+                acc[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None):
+    hidden = backbone(params, batch["tokens"], cfg, axes)
+    return chunked_loss(hidden, params["lm_head"], batch["labels"])
+
+
+# --------------------------------------------------------------------- #
+# Serving
+# --------------------------------------------------------------------- #
+
+def cache_defs(cfg: ArchConfig, batch: int, max_len: int, axes: Axes | None):
+    """Per-layer cache as ParamDef tree (stacked over layers).
+
+    Sharding: batch over ("pod","data"); the second cache dim over "model"
+    — heads when the KV head count divides the axis, otherwise the cache
+    *sequence* (GQA kv=4/8 archs; decode attention then runs a distributed
+    softmax over the sequence shards).  batch==1 (long_500k) shards the
+    sequence over "data" instead."""
+    ax = axes or Axes()
+    seq_axis = None
+    batch_axis = ax.batch if axes else None
+    head_axis = None
+    if axes:
+        if batch == 1:                # long_500k: no batch to shard
+            batch_axis, seq_axis = None, ax.data
+        elif cfg.n_kv_heads and cfg.n_kv_heads % 16 == 0:
+            head_axis = ax.model
+        else:
+            seq_axis = ax.model
+    if cfg.mla:
+        # compressed latent has no head dim to shard: put the sequence on
+        # "model" (batch>1) — 290 GB of c_kv at decode_32k x batch 128 needs
+        # the full 256-way (batch x seq) sharding.
+        mla_seq = seq_axis if seq_axis else (ax.model if axes else None)
+        one = {
+            "c_kv": pd((batch, max_len, cfg.kv_lora_rank),
+                       P(batch_axis, mla_seq, None), init="zeros"),
+            "k_pe": pd((batch, max_len, cfg.qk_rope_head_dim),
+                       P(batch_axis, mla_seq, None), init="zeros"),
+        }
+    else:
+        kv_shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        spec = P(batch_axis, seq_axis, head_axis, None)
+        one = {"k": pd(kv_shape, spec, init="zeros"),
+               "v": pd(kv_shape, spec, init="zeros")}
+    return _stack_defs(one, cfg.n_layers)
+
+
+def prefill_fn(params, batch, cfg: ArchConfig, axes: Axes | None = None,
+               max_len: int | None = None):
+    """Prompt forward.  Returns (last-position logits (B, V), cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = embed(tokens, params["embed"])
+    x = shard(x, _x_spec(cfg, axes))
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pad = max_len - s
+    # per-layer cache sharding (strip the stacked-layer leading dim of the
+    # cache_defs specs): keeps the scan's cache stack sharded — without it
+    # the MLA prefill stack materialised 12 GB/device unsharded.
+    from repro.models.common import param_specs as _ps
+    layer_cache_spec = jax.tree.map(
+        lambda spec: P(*spec[1:]),
+        _ps(cache_defs(cfg, b, max_len, axes)),
+        is_leaf=lambda x: isinstance(x, P))
+
+    def _pin(cache):
+        return jax.tree.map(lambda a, sp: shard(a, sp), cache,
+                            layer_cache_spec)
+
+    def body(x, lp):
+        xin = rmsnorm(x, lp["ln_attn"])
+        if cfg.mla:
+            a = mla_mod.mla_attention(xin, lp["attn"], cfg, axes, positions)
+            cache = mla_mod.mla_prefill_cache(xin, lp["attn"], cfg,
+                                              positions, max_len)
+        else:
+            a, (k, v) = gqa_attention(xin, lp["attn"], cfg, axes, positions)
+            cache = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))
+                             ).astype(jnp.bfloat16),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))
+                             ).astype(jnp.bfloat16),
+            }
+        x = x + a
+        x = x + ffn_block(rmsnorm(x, lp["ln_mlp"]), lp["ffn"], cfg, axes)
+        x = shard(x, _x_spec(cfg, axes))
+        return x, _pin(cache)
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x[:, -1:], params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, cache
+
+
+def decode_fn(params, cache, tokens, pos, cfg: ArchConfig,
+              axes: Axes | None = None):
+    """One decode step.  tokens (B, 1); pos scalar int32.
+    Returns (logits (B, V), new cache)."""
+    x = embed(tokens, params["embed"])
+
+    def body(x, lc):
+        lp, c = lc
+        xin = rmsnorm(x, lp["ln_attn"])
+        if cfg.mla:
+            a, c2 = mla_mod.mla_decode(xin, lp["attn"], cfg, axes, c, pos)
+        else:
+            a, c2 = gqa_decode(xin, lp["attn"], cfg, axes, c, pos)
+        x = x + a
+        x = x + ffn_block(rmsnorm(x, lp["ln_mlp"]), lp["ffn"], cfg, axes)
+        return x, c2
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(x, params["ln_f"])
+    logits = jnp.einsum("bd,dv->bv", x[:, 0].astype(jnp.float32),
+                        params["lm_head"].astype(jnp.float32))
+    return logits, new_cache

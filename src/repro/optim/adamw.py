@@ -1,0 +1,112 @@
+"""AdamW with ZeRO-1-style sharded state.
+
+Moments are f32 and inherit the parameters' 2-D (data, model) sharding — so
+optimizer state is already fully sharded across the mesh (the ZeRO-1
+property falls out of the storage sharding rather than a separate scatter).
+Updates are applied in f32 and cast back to the param dtype (bf16 weights,
+f32 moments; see DESIGN.md §5 for the master-weight trade-off)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(abstract_params):
+    return {
+        "m": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape,
+                                                          jnp.float32),
+                          abstract_params),
+        "v": jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape,
+                                                         jnp.float32),
+                          abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_specs(param_spec_tree, axes=None):
+    """Moment sharding = param sharding, plus ZeRO-1 across pods: on the
+    multi-pod mesh the f32 moments additionally shard over "pod" on the
+    dim that already carries "data" (params stay bf16-replicated per pod;
+    the update's delta is gathered once per step — far cheaper than
+    holding 2x f32 moments per pod)."""
+    from jax.sharding import PartitionSpec as P
+    import jax
+
+    def extend(s):
+        if axes is None or axes.pod is None:
+            return s
+        out = []
+        for e in s:
+            if e == axes.data:
+                out.append((axes.pod, axes.data))
+            elif isinstance(e, tuple) and axes.data in e \
+                    and axes.pod not in e:
+                out.append((axes.pod,) + tuple(e))
+            else:
+                out.append(e)
+        return P(*out)
+
+    mv = jax.tree.map(extend, param_spec_tree,
+                      is_leaf=lambda x: isinstance(x, P))
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step with global-norm clipping."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd_one(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), \
+            m2, v2
+
+    # NOTE: a scan-over-layers variant of the update was tried to shrink
+    # the f32 elementwise temporaries; it broke XLA's donation aliasing of
+    # m/v through the scan and *raised* peak memory by ~4 GB/device on
+    # deepseek — reverted (EXPERIMENTS.md §Perf iteration 6).
+    upd = upd_one
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    params2 = jax.tree.unflatten(treedef, [n[0] for n in new])
+    m2 = jax.tree.unflatten(treedef, [n[1] for n in new])
+    v2 = jax.tree.unflatten(treedef, [n[2] for n in new])
+    return params2, {"m": m2, "v": v2, "step": step}, gnorm

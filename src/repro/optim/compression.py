@@ -1,0 +1,93 @@
+"""Gradient compression for cross-pod reduction (DESIGN.md §5).
+
+The multi-pod mesh reduces gradients over the slow inter-pod links; int8
+quantisation with error feedback cuts those bytes 4x (bf16->int8 halves,
+f32->int8 quarters) at negligible quality cost when the residual is carried
+(1-bit/8-bit SGD literature).  The compressor is a pure pytree transform so
+it composes with any optimizer:
+
+    comp = ErrorFeedbackInt8()
+    cstate = comp.init(grads_like)
+    q, cstate = comp.compress(grads, cstate)     # before cross-pod psum
+    grads_hat = comp.decompress(q)               # after
+
+Random-k sparsification is provided for the extreme-bandwidth regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantized:
+    values: Any          # int8 pytree
+    scales: Any          # f32 per-tensor scales
+
+
+class ErrorFeedbackInt8:
+    """Per-tensor symmetric int8 quantisation with residual carry."""
+
+    def init(self, grads_like):
+        return jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+    def compress(self, grads, residual) -> tuple[Quantized, Any]:
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            new_r = x - q.astype(jnp.float32) * scale
+            return q, scale, new_r
+
+        flat, treedef = jax.tree.flatten(grads)
+        rflat = jax.tree.leaves(residual)
+        qs, scales, rs = zip(*[one(g, r) for g, r in zip(flat, rflat)])
+        return (Quantized(values=jax.tree.unflatten(treedef, qs),
+                          scales=jax.tree.unflatten(treedef, scales)),
+                jax.tree.unflatten(treedef, rs))
+
+    def decompress(self, q: Quantized):
+        return jax.tree.map(
+            lambda v, s: v.astype(jnp.float32) * s, q.values, q.scales)
+
+    @staticmethod
+    def bytes_ratio(dtype=jnp.float32) -> float:
+        return jnp.dtype(dtype).itemsize / 1.0      # int8 = 1 byte
+
+
+class RandomK:
+    """Memory-SGD style sparsifier (Stich et al.): transmit a random
+    k-fraction of entries *unscaled* and carry the untransmitted mass in
+    the residual — biased per step, mass-conserving over time."""
+
+    def __init__(self, fraction: float = 0.1):
+        self.fraction = fraction
+
+    def init(self, grads_like, seed: int = 0):
+        return {
+            "residual": jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads_like),
+            "key": jax.random.key(seed),
+        }
+
+    def compress(self, grads, state):
+        key, sub = jax.random.split(state["key"])
+        flat, treedef = jax.tree.flatten(grads)
+        rflat = jax.tree.leaves(state["residual"])
+        keys = jax.random.split(sub, len(flat))
+        outs, rs = [], []
+        for g, r, k in zip(flat, rflat, keys):
+            x = g.astype(jnp.float32) + r
+            mask = jax.random.bernoulli(k, self.fraction, g.shape)
+            outs.append(jnp.where(mask, x, 0.0))
+            rs.append(jnp.where(mask, 0.0, x))
+        return (jax.tree.unflatten(treedef, outs),
+                {"residual": jax.tree.unflatten(treedef, rs), "key": key})
+
+    @staticmethod
+    def decompress(q):
+        return q

@@ -1,0 +1,16 @@
+"""Python-based simulator of the offloading process (paper Sec 6).
+
+Mirrors the paper's class structure: the ``System`` orchestrator drives a
+``Strategy`` step by step against an ``Accelerator`` (on-chip memory +
+processing element) and a ``Dram``; the ``ConvLayer`` carries the problem
+data.  The simulation is *functional*: real values are convolved, and the
+final DRAM output is checked against a reference convolution.
+"""
+from repro.sim.accelerator import Accelerator, OnChipMemory
+from repro.sim.dram import Dram
+from repro.sim.layer import ConvLayer
+from repro.sim.system import SimReport, System
+from repro.sim.functional import reference_conv
+
+__all__ = ["Accelerator", "OnChipMemory", "Dram", "ConvLayer",
+           "System", "SimReport", "reference_conv"]

@@ -1,0 +1,32 @@
+"""Reference convolution oracle for the functional simulation check."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.layer import ConvLayer
+
+
+def reference_conv(layer: ConvLayer) -> np.ndarray:
+    """Direct cross-correlation (Def 8's output equation), numpy."""
+    s = layer.spec
+    out = np.zeros((s.c_out, s.h_out, s.w_out), dtype=np.float32)
+    for i in range(s.h_out):
+        for j in range(s.w_out):
+            win = layer.input[:, i * s.s_h:i * s.s_h + s.h_k,
+                              j * s.s_w:j * s.s_w + s.w_k]
+            out[:, i, j] = np.einsum("nchw,chw->n", layer.kernels, win)
+    return out
+
+
+def reference_conv_jax(layer: ConvLayer) -> np.ndarray:
+    """Independent oracle via jax.lax (used by the test suite)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    s = layer.spec
+    lhs = jnp.asarray(layer.input)[None]            # NCHW
+    rhs = jnp.asarray(layer.kernels)                # OIHW
+    out = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(s.s_h, s.s_w), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return np.asarray(out[0])

@@ -1,0 +1,117 @@
+"""System orchestrator (paper Sec 6, Fig 10).
+
+At each step the system 1) reads the current step from the strategy, 2) frees
+the unnecessary elements in the on-chip memory, 3) writes the results to the
+DRAM, 4) loads the necessary elements from DRAM to on-chip memory,
+5) triggers the accelerator, 6) loops.  Alongside the functional execution it
+re-runs the *formal* semantics (`repro.core.formalism`) and asserts both
+agree on the memory state at every step."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.formalism import (MemoryState, Step, apply_step,
+                                  step_duration)
+from repro.core.strategies import GroupedStrategy
+from repro.sim.accelerator import Accelerator
+from repro.sim.dram import Dram
+from repro.sim.functional import reference_conv
+from repro.sim.layer import ConvLayer
+from repro.sim.trace import StepTrace
+
+
+@dataclasses.dataclass
+class SimReport:
+    output: np.ndarray
+    correct: bool
+    max_abs_err: float
+    total_duration: float
+    peak_footprint: int
+    elements_read: int
+    elements_written: int
+    total_macs: int
+    traces: list[StepTrace]
+
+    def summary(self) -> str:
+        return (f"steps={len(self.traces)} duration={self.total_duration:g} "
+                f"peak_mem={self.peak_footprint} "
+                f"dram_rd={self.elements_read} dram_wr={self.elements_written} "
+                f"macs={self.total_macs} correct={self.correct} "
+                f"(max_err={self.max_abs_err:.2e})")
+
+
+class System:
+    """Executes a strategy (user-defined or solver-produced) functionally."""
+
+    def __init__(self, layer: ConvLayer, hw: HardwareModel):
+        self.layer = layer
+        self.hw = hw
+
+    def run(self, strategy: GroupedStrategy | list[Step],
+            check: bool = True) -> SimReport:
+        spec = self.layer.spec
+        steps = (strategy.to_steps()
+                 if isinstance(strategy, GroupedStrategy) else strategy)
+        dram = Dram(self.layer)
+        acc = Accelerator(spec, self.hw)
+        formal = MemoryState()
+        traces: list[StepTrace] = []
+        total_duration = 0.0
+        peak = 0
+        for idx, s in enumerate(steps):
+            # 2) free
+            acc.mem.free_pixels(spec.pixels_of_mask(s.f_inp))
+            acc.mem.free_kernels(spec.pixels_of_mask(s.f_ker))
+            # 3) write back
+            for pid, vals in acc.mem.pop_outputs(
+                    spec.pixels_of_mask(s.w)).items():
+                dram.write_output(pid, vals)
+            # 4) load
+            for j in spec.pixels_of_mask(s.i_slice):
+                h, w = spec.pixel_pos(j)
+                acc.mem.store_pixel(j, dram.read_pixel(h, w))
+            for k in spec.pixels_of_mask(s.k_sub):
+                acc.mem.store_kernel(k, dram.read_kernel(k))
+            peak = max(peak, acc.mem.used)
+            acc.mem.check_capacity()
+            # 5) compute
+            if s.computes:
+                acc.compute(s.group)
+                peak = max(peak, acc.mem.used)
+                acc.mem.check_capacity()
+            # formal semantics must agree with the functional memory state
+            formal = apply_step(formal, s)
+            assert set(spec.pixels_of_mask(formal.inp)) == \
+                set(acc.mem.pixels), f"step {idx}: input state mismatch"
+            assert set(spec.pixels_of_mask(formal.ker)) == \
+                set(acc.mem.kernels), f"step {idx}: kernel state mismatch"
+            assert set(spec.pixels_of_mask(formal.out)) == \
+                set(acc.mem.outputs), f"step {idx}: output state mismatch"
+            total_duration += step_duration(s, spec, self.hw)
+            traces.append(StepTrace(
+                index=idx, step=s, mem_elements=acc.mem.used,
+                duration=step_duration(s, spec, self.hw)))
+
+        max_err = 0.0
+        ok = True
+        if check:
+            ref = reference_conv(self.layer)
+            if np.any(np.isnan(dram.output)):
+                ok = False
+                max_err = float("nan")
+            else:
+                max_err = float(np.max(np.abs(dram.output - ref)))
+                ok = bool(np.allclose(dram.output, ref, rtol=1e-4,
+                                      atol=1e-4))
+        return SimReport(
+            output=dram.output, correct=ok, max_abs_err=max_err,
+            total_duration=total_duration,
+            peak_footprint=peak,
+            elements_read=dram.elements_read,
+            elements_written=dram.elements_written,
+            total_macs=acc.total_macs,
+            traces=traces)

@@ -1,0 +1,55 @@
+"""Step-by-step trace + visualisation (paper Sec 6 / Fig 9)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.formalism import Step
+from repro.core.strategies import GroupedStrategy
+
+
+@dataclasses.dataclass
+class StepTrace:
+    index: int
+    step: Step
+    mem_elements: int
+    duration: float
+
+    def describe(self, spec: ConvSpec) -> str:
+        s = self.step
+        return (f"step {self.index:3d}: "
+                f"free_inp={s.f_inp.bit_count():3d} "
+                f"free_ker={s.f_ker.bit_count():2d} "
+                f"write={s.w.bit_count():3d} "
+                f"load_inp={s.i_slice.bit_count():3d} "
+                f"load_ker={s.k_sub.bit_count():2d} "
+                f"compute={len(s.group):3d}p "
+                f"mem={self.mem_elements:5d} dur={self.duration:g}")
+
+
+def render_group_grid(strategy: GroupedStrategy) -> str:
+    """ASCII analogue of the paper's Fig 9: each output position labelled by
+    the step (group) that computes it."""
+    spec = strategy.spec
+    cell = max(2, len(str(strategy.n_steps - 1)))
+    grid = [["?" * 1 for _ in range(spec.w_out)] for _ in range(spec.h_out)]
+    for k, g in enumerate(strategy.groups):
+        for pid in g:
+            i, j = spec.patch_pos(pid)
+            grid[i][j] = str(k)
+    lines = [f"strategy={strategy.name} groups={strategy.n_steps} "
+             f"(output grid, value = computing step)"]
+    for row in grid:
+        lines.append(" ".join(v.rjust(cell) for v in row))
+    return "\n".join(lines)
+
+
+def render_input_heatmap(strategy: GroupedStrategy) -> str:
+    """Input-pixel load counts (reload pressure visualisation)."""
+    spec = strategy.spec
+    loads = strategy.loads_per_pixel()
+    lines = [f"input load counts (H_in x W_in), strategy={strategy.name}"]
+    for h in range(spec.h_in):
+        lines.append(" ".join(
+            str(loads.get(spec.pixel_id(h, w), 0)) for w in range(spec.w_in)))
+    return "\n".join(lines)

@@ -1,0 +1,58 @@
+"""End-to-end dry-run integration: run the actual dryrun module in a
+subprocess (it must own jax initialisation for the 512-device flag) on the
+two cheapest cells and validate the JSON contract §Roofline consumes."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape,multi_pod", [
+    ("tinyllama-1.1b", "decode_32k", False),
+    ("mamba2-2.7b", "long_500k", True),
+])
+def test_dryrun_cell_subprocess(tmp_path, arch, shape, multi_pod):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", str(tmp_path)]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1200)
+    assert r.returncode == 0, r.stderr[-2000:]
+    tag = "pod" if multi_pod else "single"
+    path = tmp_path / f"{arch}_{shape}_{tag}.json"
+    with open(path) as f:
+        cell = json.load(f)
+    assert cell["status"] == "ok"
+    assert cell["chips"] == (512 if multi_pod else 256)
+    a = cell["analyzed"]
+    assert a["matmul_flops_per_device"] > 0
+    assert a["bytes_accessed_per_device"] > a["matmul_flops_per_device"] * 0
+    assert a["unknown_trip_loops"] == 0
+    assert cell["memory"]["peak_device_bytes"] > 0
+    # §Roofline must be derivable from the JSON
+    sys.path.insert(0, os.path.join(REPO, "benchmarks"))
+    import roofline
+    row = roofline.derive(cell)
+    assert row["dominant"] in ("compute", "memory", "collective")
+    assert 0.0 <= row["roofline_fraction"] <= 1.0
+
+
+def test_dryrun_skip_cell(tmp_path):
+    """long_500k on a full-attention arch must produce a SKIP record."""
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "tinyllama-1.1b", "--shape", "long_500k",
+           "--out", str(tmp_path)]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=600)
+    assert r.returncode == 0
+    with open(tmp_path / "tinyllama-1.1b_long_500k_single.json") as f:
+        cell = json.load(f)
+    assert cell["status"] == "skipped"
+    assert "sub-quadratic" in cell["reason"]

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import planner
+from repro.core.conv_spec import ConvSpec
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+# --------------------------- conv2d_offload --------------------------- #
+
+@pytest.mark.parametrize("c_in,h,w,n,kh,kw,sh,sw,t_run", [
+    (1, 6, 6, 1, 3, 3, 1, 1, 2),
+    (3, 12, 14, 5, 3, 3, 1, 1, 4),
+    (2, 9, 11, 4, 2, 2, 1, 1, 5),
+    (4, 16, 16, 8, 5, 5, 1, 1, 4),
+    (2, 11, 13, 3, 3, 3, 2, 2, 3),
+    (1, 8, 8, 2, 1, 1, 1, 1, 8),
+])
+def test_conv_shapes(c_in, h, w, n, kh, kw, sh, sw, t_run):
+    x = RNG.standard_normal((c_in, h, w)).astype(np.float32)
+    k = RNG.standard_normal((n, c_in, kh, kw)).astype(np.float32)
+    out = ops.conv2d(x, k, t_run=t_run, s_h=sh, s_w=sw)
+    exp = ref.conv2d(jnp.asarray(x), jnp.asarray(k), sh, sw)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("order", ["zigzag", "row"])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_conv_orders_dtypes(order, dtype):
+    x = RNG.standard_normal((2, 10, 12)).astype(dtype)
+    k = RNG.standard_normal((3, 2, 3, 3)).astype(dtype)
+    out = ops.conv2d(x, k, t_run=5, order=order)
+    exp = ref.conv2d(jnp.asarray(x), jnp.asarray(k))
+    tol = 1e-4 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_conv_planner_t_run():
+    x = RNG.standard_normal((2, 10, 12)).astype(np.float32)
+    k = RNG.standard_normal((3, 2, 3, 3)).astype(np.float32)
+    out = ops.conv2d(x, k)          # planner chooses t_run
+    exp = ref.conv2d(jnp.asarray(x), jnp.asarray(k))
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------- block_matmul --------------------------- #
+
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (64, 64, 64, 32, 32, 32),
+    (200, 150, 300, 64, 64, 64),
+    (128, 128, 128, 128, 128, 128),
+    (96, 257, 130, 32, 64, 64),
+])
+@pytest.mark.parametrize("order", ["mnk", "nmk", "mkn", "knm"])
+def test_matmul_shapes_orders(m, n, k, bm, bn, bk, order):
+    a = RNG.standard_normal((m, k)).astype(np.float32)
+    b = RNG.standard_normal((k, n)).astype(np.float32)
+    out = ops.matmul(a, b, bm=bm, bn=bn, bk=bk, order=order)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    a = RNG.standard_normal((64, 96)).astype(dtype)
+    b = RNG.standard_normal((96, 64)).astype(dtype)
+    out = ops.matmul(a, b, bm=32, bn=32, bk=32, order="mnk")
+    exp = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    tol = 1e-3 if dtype == np.float32 else 2.0
+    np.testing.assert_allclose(np.asarray(out, np.float32), exp,
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------- flash_decode --------------------------- #
+
+@pytest.mark.parametrize("b,hq,hkv,d,s,bkv", [
+    (1, 4, 4, 32, 128, 64),       # MHA
+    (2, 8, 2, 64, 256, 64),       # GQA 4:1
+    (2, 8, 1, 64, 256, 128),      # MQA
+    (1, 16, 4, 128, 512, 256),
+])
+def test_decode_attention(b, hq, hkv, d, s, bkv):
+    q = RNG.standard_normal((b, hq, d)).astype(np.float32)
+    k = RNG.standard_normal((b, s, hkv, d)).astype(np.float32)
+    v = RNG.standard_normal((b, s, hkv, d)).astype(np.float32)
+    lengths = RNG.integers(1, s + 1, size=(b,)).astype(np.int32)
+    out = ops.decode_attention(q, k, v, jnp.asarray(lengths), bkv=bkv)
+    g = hq // hkv
+    for bi in range(b):
+        for h in range(hq):
+            exp = ref.decode_attention(
+                jnp.asarray(q[bi, h:h + 1]), jnp.asarray(k[bi, :, h // g]),
+                jnp.asarray(v[bi, :, h // g]), int(lengths[bi]))[0]
+            np.testing.assert_allclose(out[bi, h], exp, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_full_length_default():
+    q = RNG.standard_normal((1, 4, 32)).astype(np.float32)
+    k = RNG.standard_normal((1, 128, 4, 32)).astype(np.float32)
+    v = RNG.standard_normal((1, 128, 4, 32)).astype(np.float32)
+    out = ops.decode_attention(q, k, v, bkv=32)
+    exp = ops.decode_attention(q, k, v, jnp.asarray([128], jnp.int32),
+                               bkv=32)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------- planner ------------------------------ #
+
+def test_planner_matmul_fits_vmem_and_prefers_reuse():
+    p = planner.plan_matmul(8192, 8192, 8192, dtype_bytes=2)
+    assert p.vmem_bytes <= planner.TPU_V5E.vmem_bytes
+    # compute-bound at this size: overlapped duration == flops/peak
+    assert abs(p.duration_overlapped - p.flops / planner.TPU_V5E.peak_flops) \
+        / p.duration_overlapped < 1e-6
+    # bytes moved must be >= the compulsory traffic (A+B+C once)
+    compulsory = 2 * (8192 * 8192 * 3)
+    assert p.hbm_bytes >= compulsory
+
+
+def test_planner_decode_attention_is_memory_bound():
+    p = planner.plan_decode_attention(32768, 128, 8, dtype_bytes=2)
+    t_mem = p.hbm_bytes / planner.TPU_V5E.hbm_bw
+    assert p.duration_overlapped == t_mem      # decode: always memory-bound
+    assert 32768 % p.tiles["bkv"] == 0
+
+
+def test_planner_conv_prefers_wider_runs():
+    spec = ConvSpec(3, 64, 64, 8, 3, 3)
+    p = planner.plan_conv(spec, dtype_bytes=4)
+    assert p.tiles["t"] > 1                    # grouping beats S1-baseline
+    assert p.vmem_bytes <= planner.TPU_V5E.vmem_bytes
+
+
+def test_planner_duration_models_ordering():
+    p = planner.plan_matmul(1024, 1024, 1024, dtype_bytes=2)
+    assert p.duration_overlapped <= p.duration_additive

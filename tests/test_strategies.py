@@ -1,0 +1,118 @@
+"""Strategy builders + hypothesis property tests of system invariants."""
+import hypothesis
+from hypothesis import given, settings, strategies as st
+
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.formalism import run_steps
+from repro.core.strategies import (GroupedStrategy, best_heuristic, hilbert,
+                                   k_min, lower_bound, row_by_row,
+                                   s1_baseline, tiled, zigzag)
+
+BIG_HW = HardwareModel(nbop_pe=10**9)
+
+
+def specs():
+    return st.builds(
+        ConvSpec,
+        c_in=st.integers(1, 3),
+        h_in=st.integers(3, 9),
+        w_in=st.integers(3, 9),
+        n_kernels=st.integers(1, 4),
+        h_k=st.integers(1, 3),
+        w_k=st.integers(1, 3),
+        s_h=st.integers(1, 2),
+        s_w=st.integers(1, 2),
+    ).filter(lambda s: s.h_in >= s.h_k and s.w_in >= s.w_k)
+
+
+@settings(max_examples=40, deadline=None)
+@given(spec=specs(), p=st.integers(1, 6),
+       builder=st.sampled_from([row_by_row, zigzag, tiled, hilbert]))
+def test_property_every_patch_exactly_once(spec, p, builder):
+    strat = builder(spec, p)
+    seen = sorted(pid for g in strat.groups for pid in g)
+    assert seen == list(range(spec.num_patches))
+    assert strat.max_group_size() <= p
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=specs(), p=st.integers(1, 6),
+       builder=st.sampled_from([row_by_row, zigzag, tiled, hilbert]))
+def test_property_semantics_execute_and_duration_matches(spec, p, builder):
+    """Invariant: Def-16 strategies always execute under the Def-2 semantics,
+    memory ends empty, and eq. 15 == t_l*sum|I_slice| + n*t_acc recomputed
+    from the raw steps."""
+    strat = builder(spec, p)
+    res = run_steps(strat.to_steps(), spec, BIG_HW)
+    assert res.states[-1].empty
+    islice_sum = sum(s.i_slice.bit_count() for s in strat.to_steps())
+    assert strat.objective(BIG_HW) == islice_sum + strat.n_steps
+    assert strat.pixels_loaded() == islice_sum
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=specs(), p=st.integers(1, 6))
+def test_property_objective_at_least_lower_bound(spec, p):
+    for builder in (row_by_row, zigzag, tiled, hilbert):
+        assert builder(spec, p).objective(BIG_HW) >= \
+            lower_bound(spec, p, BIG_HW)
+
+
+@settings(max_examples=20, deadline=None)
+@given(spec=specs(), p=st.integers(2, 6))
+def test_property_grouping_never_worse_than_baseline(spec, p):
+    """S1 with groups (paper's extension) dominates S1-baseline (1 patch per
+    step) for any heuristic order, since merging consecutive patches can only
+    remove steps and increase intra-group reuse."""
+    assert row_by_row(spec, p).objective(BIG_HW) <= \
+        s1_baseline(spec).objective(BIG_HW)
+
+
+def test_zigzag_equals_row_when_group_is_multiple_of_wout():
+    """Paper Sec 7.2: 'for group sizes that are a multiple of W_out the
+    ZigZag and Row-by-Row strategies are identical' (in duration)."""
+    spec = ConvSpec(1, 10, 10, 1, 3, 3)        # W_out = 8
+    for mult in (1, 2):
+        p = spec.w_out * mult
+        assert zigzag(spec, p).objective(BIG_HW) == \
+            row_by_row(spec, p).objective(BIG_HW)
+
+
+def test_zigzag_beats_row_for_small_groups():
+    """Paper Sec 7.2: for small group sizes ZigZag outperforms Row-by-Row."""
+    spec = ConvSpec(1, 12, 12, 1, 3, 3)
+    assert zigzag(spec, 2).objective(BIG_HW) < \
+        row_by_row(spec, 2).objective(BIG_HW)
+
+
+def test_best_heuristic_matches_min():
+    spec = ConvSpec(1, 8, 8, 1, 3, 3)
+    b = best_heuristic(spec, 3, BIG_HW)
+    assert b.objective(BIG_HW) == min(
+        zigzag(spec, 3).objective(BIG_HW),
+        row_by_row(spec, 3).objective(BIG_HW))
+
+
+def test_k_min_definition():
+    spec = ConvSpec(1, 12, 12, 1, 3, 3)        # |X| = 100
+    assert k_min(spec, 4) == 25
+    assert k_min(spec, 3) == 34
+
+
+def test_tiled_beats_rbr_and_zigzag_on_square_budget():
+    """Beyond-paper: 2-D tiles minimise halo perimeter, so with p=4 a 2x2
+    tile should beat both 1-D heuristics on a large enough input."""
+    spec = ConvSpec(1, 12, 12, 1, 3, 3)
+    t = tiled(spec, 4).objective(BIG_HW)
+    assert t <= zigzag(spec, 4).objective(BIG_HW)
+    assert t <= row_by_row(spec, 4).objective(BIG_HW)
+
+
+def test_duplicate_patch_rejected():
+    spec = ConvSpec(1, 4, 4, 1, 3, 3)
+    try:
+        GroupedStrategy("bad", spec, ((0, 1), (1, 2), (3,)))
+    except ValueError:
+        return
+    raise AssertionError("duplicate patch not rejected")
