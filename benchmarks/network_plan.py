@@ -1,0 +1,107 @@
+"""Network-planning benchmark: plan whole conv networks (LeNet-5, ResNet-8)
+and compare the predicted schedule against the per-layer-greedy baseline
+(best Row-by-Row/ZigZag heuristic, no polish, no inter-layer reuse).
+
+Emits one JSON per run with planning throughput (layers/sec), the total
+predicted duration for plan vs. baseline, per-layer critical-path rows, and
+the solve-cache hit rate.
+
+    PYTHONPATH=src python -m benchmarks.network_plan \
+        [--networks lenet5 resnet8] [--size-mem N] [--restarts 4] \
+        [--iters 6000] [--out benchmarks/results/network_plan.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.configs.networks import NETWORKS
+from repro.core import solver
+from repro.core.cost_model import HardwareModel
+from repro.core.network_planner import plan_network
+
+
+def bench_network(name: str, hw: HardwareModel, *, iters: int,
+                  restarts: int, rng_seed: int) -> dict:
+    specs = NETWORKS[name]
+    t0 = time.perf_counter()
+    plan = plan_network(specs, hw, name=name, polish_iters=iters,
+                        polish_restarts=restarts, rng_seed=rng_seed)
+    wall = time.perf_counter() - t0
+    return {
+        "network": name,
+        "n_layers": plan.n_layers,
+        "planning_wall_s": round(wall, 4),
+        "planning_layers_per_s": round(plan.n_layers / max(wall, 1e-9), 2),
+        "solver_calls": plan.solver_calls,
+        "cache_hits": plan.cache_hits,
+        "total_duration": plan.total_duration,
+        "gross_duration": plan.gross_duration,
+        "greedy_baseline_duration": plan.baseline_duration,
+        "gain_vs_baseline": round(plan.gain_vs_baseline, 4),
+        "beats_baseline": plan.total_duration < plan.baseline_duration,
+        "critical_path": [
+            {"layer": i, "duration": d, "fraction": round(f, 4)}
+            for i, d, f in plan.critical_path()],
+        "layers": [
+            {"index": lp.index,
+             "shape": f"{lp.spec.c_in}x{lp.spec.h_in}x{lp.spec.w_in}"
+                      f"->{lp.spec.c_out}x{lp.spec.h_out}x{lp.spec.w_out}",
+             "p": lp.p,
+             "strategy": lp.strategy.name,
+             "steps": lp.strategy.n_steps,
+             "duration": lp.duration,
+             "gross_duration": lp.gross_duration,
+             "optimality_gap": round(lp.result.gap, 4),
+             "reuse_input": lp.reuse_input,
+             "reuse_output": lp.reuse_output}
+            for lp in plan.layers],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--networks", nargs="+", default=sorted(NETWORKS),
+                    choices=sorted(NETWORKS))
+    ap.add_argument("--size-mem", type=int, default=None,
+                    help="on-chip budget in elements (default: unconstrained,"
+                         " the paper's Sec-7.1 setting)")
+    ap.add_argument("--nbop-pe", type=int, default=10 ** 9)
+    ap.add_argument("--iters", type=int, default=6000)
+    ap.add_argument("--restarts", type=int, default=4)
+    ap.add_argument("--rng-seed", type=int, default=0)
+    ap.add_argument("--out", default="benchmarks/results/network_plan.json")
+    args = ap.parse_args(argv)
+
+    hw = HardwareModel(nbop_pe=args.nbop_pe, size_mem=args.size_mem)
+    solver.solve_cached.cache_clear()
+    rows = [bench_network(n, hw, iters=args.iters, restarts=args.restarts,
+                          rng_seed=args.rng_seed) for n in args.networks]
+
+    result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
+                     "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
+              "polish": {"iters": args.iters, "restarts": args.restarts},
+              "networks": rows}
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    for r in rows:
+        print(f"[network_plan] {r['network']}: "
+              f"planned {r['n_layers']} layers in {r['planning_wall_s']}s "
+              f"({r['planning_layers_per_s']} layers/s, "
+              f"{r['cache_hits']}/{r['solver_calls']} cache hits); "
+              f"predicted {r['total_duration']:g} vs greedy "
+              f"{r['greedy_baseline_duration']:g} "
+              f"(gain {r['gain_vs_baseline']:.1%})")
+    print("saved ->", args.out)
+    return 0 if all(r["beats_baseline"] for r in rows) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

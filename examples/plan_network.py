@@ -1,0 +1,32 @@
+"""Demo: plan a whole conv network, print the schedule, and validate it
+functionally with the Sec-6 simulator.
+
+    PYTHONPATH=src python examples/plan_network.py [lenet5|resnet8]
+"""
+import sys
+
+from repro.configs.networks import NETWORKS
+from repro.core.cost_model import HardwareModel
+from repro.core.network_planner import plan_network
+from repro.sim import simulate_network
+
+
+def main() -> None:
+    name = sys.argv[1] if len(sys.argv) > 1 else "lenet5"
+    if name not in NETWORKS:
+        sys.exit(f"unknown network {name!r}; choose from "
+                 f"{', '.join(sorted(NETWORKS))}")
+    hw = HardwareModel(nbop_pe=10 ** 9, size_mem=None)
+    plan = plan_network(NETWORKS[name], hw, name=name,
+                        polish_iters=4000, polish_restarts=4)
+    print(plan.report())
+    print()
+    rep = simulate_network(plan)
+    print(rep.summary())
+    assert rep.correct, "functional check failed"
+    assert rep.accounting_exact, "duration model disagrees with simulator"
+    print("functional + accounting checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,3 +5,7 @@ from repro.core.conv_spec import ConvSpec
 LENET5_L1 = ConvSpec(c_in=1, h_in=32, w_in=32, n_kernels=6, h_k=5, w_k=5)
 # second conv layer: 6x14x14 -> sixteen 5x5 kernels
 LENET5_L2 = ConvSpec(c_in=6, h_in=14, w_in=14, n_kernels=16, h_k=5, w_k=5)
+
+# the conv backbone in execution order (pooling between layers happens
+# on-chip and is free in the planning model — see core.network_planner)
+LAYERS = (LENET5_L1, LENET5_L2)

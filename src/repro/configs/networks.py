@@ -1,0 +1,7 @@
+"""Registry of conv-network workloads for the network-level planner."""
+from repro.configs import lenet5, resnet8
+
+NETWORKS = {
+    "lenet5": lenet5.LAYERS,
+    "resnet8": resnet8.LAYERS,
+}

@@ -1,0 +1,285 @@
+"""Network-level offloading planner (beyond-paper: whole-CNN scheduling).
+
+The paper (and ``core.solver``) optimises ONE convolution layer.  A real
+workload is a *network* — an ordered sequence of conv layers (LeNet-5,
+ResNet-8, ... in ``repro.configs``).  This module plans the whole sequence:
+
+  1. every layer is solved with the Sec-5/7 machinery (heuristic seeds +
+     multi-restart parallel polish, optional MILP) through an LRU cache, so
+     repeated layer shapes (ResNet stages) are solved once;
+  2. layer durations use the *full* Def-3 accounting — eq. 15 plus the
+     kernel load and the output write-back that the paper's single-layer
+     experiments exclude — because at network level the write-back of layer
+     l and the input load of layer l+1 are exactly the terms inter-layer
+     scheduling can remove;
+  3. when the activation between two layers fits the on-chip budget next to
+     the successor's working set, the HBM round trip is skipped: layer l
+     keeps its outputs resident (no write-back) and layer l+1 reads each of
+     its input pixels' *first* load from on-chip memory (reloads beyond the
+     first still hit DRAM).  This is the layer-cascade reuse of
+     Stoutchinin et al. / Jokic et al. transplanted onto the paper's
+     formalism.  Elementwise ops between convs (ReLU, pooling) are assumed
+     fused on-chip and free, per the usual accelerator dataflow.
+
+``plan_network`` returns a ``NetworkPlan`` with per-layer strategies, the
+aggregate predicted duration, the per-layer-greedy baseline (no reuse, no
+polish — what a layer-at-a-time compiler would emit), and a critical-path
+report naming the layers that dominate the schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+from repro.core import solver as solver_mod
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.strategies import GroupedStrategy, best_heuristic
+
+
+def resolve_group_size(spec: ConvSpec, hw: HardwareModel,
+                       max_group: int | None = 16) -> int:
+    """nb_patches_max_S1 (Sec 4.2) clipped to the patch count and to an
+    optional planning cap (huge PEs would otherwise allow one giant group,
+    which blows up the tiled-shape enumeration without helping reuse)."""
+    p = hw.nb_patches_max_s1(spec.nb_op_value, spec.c_out)
+    p = min(p, spec.num_patches)
+    if max_group is not None:
+        p = min(p, max_group)
+    return max(1, p)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's slot in the network schedule."""
+
+    index: int
+    spec: ConvSpec
+    p: int
+    result: solver_mod.SolveResult
+    reuse_input: bool       # input arrives on-chip from the previous layer
+    reuse_output: bool      # output held on-chip for the next layer
+    gross_duration: float   # full Def-3 duration, no inter-layer reuse
+    input_load_saved: float  # t_l saved on first loads when reuse_input
+    write_back_saved: float  # t_w saved when reuse_output
+
+    @property
+    def strategy(self) -> GroupedStrategy:
+        return self.result.strategy
+
+    @property
+    def duration(self) -> float:
+        """Net contribution to the network schedule."""
+        return self.gross_duration - self.input_load_saved \
+            - self.write_back_saved
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """A solved whole-network offloading schedule."""
+
+    name: str
+    hw: HardwareModel
+    layers: tuple[LayerPlan, ...]
+    total_duration: float        # with inter-layer reuse
+    gross_duration: float        # same strategies, no reuse
+    baseline_duration: float     # per-layer greedy: best heuristic, no reuse
+    planning_seconds: float
+    solver_calls: int
+    cache_hits: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def gain_vs_baseline(self) -> float:
+        if self.baseline_duration == 0:
+            return 0.0
+        return 1.0 - self.total_duration / self.baseline_duration
+
+    @property
+    def layers_per_second(self) -> float:
+        if self.planning_seconds <= 0:
+            return float("inf")
+        return self.n_layers / self.planning_seconds
+
+    def critical_path(self) -> list[tuple[int, float, float]]:
+        """(layer index, duration, fraction of total) sorted by duration
+        descending — the layers to attack next."""
+        total = self.total_duration or 1.0
+        rows = [(lp.index, lp.duration, lp.duration / total)
+                for lp in self.layers]
+        return sorted(rows, key=lambda r: -r[1])
+
+    def report(self) -> str:
+        lines = [f"network plan: {self.name}  "
+                 f"({self.n_layers} layers, planned in "
+                 f"{self.planning_seconds:.2f}s, "
+                 f"{self.layers_per_second:.1f} layers/s, "
+                 f"{self.cache_hits}/{self.solver_calls} cache hits)"]
+        for lp in self.layers:
+            tags = []
+            if lp.reuse_input:
+                tags.append("in<-chip")
+            if lp.reuse_output:
+                tags.append("out->chip")
+            lines.append(
+                f"  L{lp.index}: {lp.spec.c_in}x{lp.spec.h_in}x{lp.spec.w_in}"
+                f" -> {lp.spec.c_out}x{lp.spec.h_out}x{lp.spec.w_out}"
+                f"  p={lp.p} steps={lp.strategy.n_steps}"
+                f" strat={lp.strategy.name}"
+                f" dur={lp.duration:g}"
+                f" (gross {lp.gross_duration:g})"
+                f" gap={lp.result.gap:.1%}"
+                f"{('  [' + ','.join(tags) + ']') if tags else ''}")
+        crit = self.critical_path()[0]
+        lines.append(
+            f"  total={self.total_duration:g} (gross {self.gross_duration:g},"
+            f" greedy baseline {self.baseline_duration:g},"
+            f" gain {self.gain_vs_baseline:.1%});"
+            f" critical layer L{crit[0]} ({crit[2]:.0%} of total)")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------- #
+# Inter-layer reuse feasibility
+# --------------------------------------------------------------------- #
+
+def activation_fits(prev: ConvSpec, prev_strategy: GroupedStrategy,
+                    nxt: ConvSpec, nxt_strategy: GroupedStrategy,
+                    hw: HardwareModel) -> bool:
+    """Can layer ``prev``'s output stay resident until ``nxt`` consumed it?
+
+    Both ends must fit: while ``prev`` executes, its accumulating output
+    map (no longer drained by write-backs) coexists with prev's own
+    working set; while ``nxt`` executes, the held activation (the larger
+    of prev's output map and nxt's input map, since pooling/padding
+    between them happens on-chip) coexists with nxt's peak working set
+    (kernels + largest group's pixels + outputs).  ``size_mem=None`` is
+    the paper's unconstrained Sec-7.1 setting: always fits.
+    """
+    if hw.size_mem is None:
+        return True
+    held = max(prev.num_patches * prev.c_out,
+               nxt.num_pixels * nxt.c_in)
+    producer_ok = (held + prev.kernel_elements
+                   + prev_strategy.peak_input_footprint() * prev.c_in
+                   <= hw.size_mem)
+    consumer_ok = held + nxt_strategy.peak_footprint_elements() \
+        <= hw.size_mem
+    return producer_ok and consumer_ok
+
+
+# --------------------------------------------------------------------- #
+# Baselines
+# --------------------------------------------------------------------- #
+
+def greedy_network_duration(specs: Sequence[ConvSpec], hw: HardwareModel,
+                            p: int | Sequence[int] | None = None,
+                            max_group: int | None = 16) -> float:
+    """Per-layer-greedy baseline: every layer takes the best of the paper's
+    two heuristics (Row-by-Row / ZigZag), no polish, no MILP, and every
+    activation makes the full HBM round trip (write-back + reload)."""
+    ps = _resolve_ps(specs, hw, p, max_group)
+    return sum(best_heuristic(spec, pp, hw).full_duration(hw)
+               for spec, pp in zip(specs, ps))
+
+
+def _resolve_ps(specs: Sequence[ConvSpec], hw: HardwareModel,
+                p: int | Sequence[int] | None,
+                max_group: int | None) -> list[int]:
+    if p is None:
+        return [resolve_group_size(s, hw, max_group) for s in specs]
+    if isinstance(p, int):
+        return [min(p, s.num_patches) for s in specs]
+    ps = list(p)
+    if len(ps) != len(specs):
+        raise ValueError(f"{len(ps)} group sizes for {len(specs)} layers")
+    return ps
+
+
+# --------------------------------------------------------------------- #
+# Front door
+# --------------------------------------------------------------------- #
+
+def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
+                 *,
+                 name: str = "network",
+                 p: int | Sequence[int] | None = None,
+                 max_group: int | None = 16,
+                 nb_data_reload: int = 2,
+                 polish_iters: int = 6_000,
+                 polish_restarts: int = 4,
+                 use_milp: bool = False,
+                 time_limit: float = 10.0,
+                 rng_seed: int = 0,
+                 allow_reuse: bool = True,
+                 solve_fn: Callable[..., solver_mod.SolveResult] | None = None,
+                 ) -> NetworkPlan:
+    """Solve every layer and assemble the network schedule.
+
+    Deterministic for fixed ``rng_seed`` (restart seeds are derived from
+    it; see ``solver.polish_multi``).  ``solve_fn`` overrides the cached
+    solver (tests / custom search)."""
+    specs = list(specs)
+    if not specs:
+        raise ValueError("empty network")
+    ps = _resolve_ps(specs, hw, p, max_group)
+    fn = solve_fn or solver_mod.solve_cached
+
+    hits0 = calls0 = 0
+    if fn is solver_mod.solve_cached:
+        info = solver_mod.solve_cached.cache_info()
+        hits0, calls0 = info.hits, info.hits + info.misses
+
+    t0 = time.perf_counter()
+    results = [fn(spec, pp, hw, nb_data_reload=nb_data_reload,
+                  time_limit=time_limit, polish_iters=polish_iters,
+                  use_milp=use_milp, rng_seed=rng_seed,
+                  polish_restarts=polish_restarts)
+               for spec, pp in zip(specs, ps)]
+    planning_seconds = time.perf_counter() - t0
+
+    cache_hits = solver_calls = 0
+    if fn is solver_mod.solve_cached:
+        info = solver_mod.solve_cached.cache_info()
+        cache_hits = info.hits - hits0
+        solver_calls = (info.hits + info.misses) - calls0
+
+    # inter-layer reuse: decide for every adjacent pair whether the
+    # activation stays on-chip.
+    reuse_after = []                      # reuse_after[i]: i -> i+1 held
+    for i in range(len(specs) - 1):
+        reuse_after.append(
+            allow_reuse and activation_fits(
+                specs[i], results[i].strategy,
+                specs[i + 1], results[i + 1].strategy, hw))
+
+    layers: list[LayerPlan] = []
+    total = gross_total = 0.0
+    for i, (spec, pp, res) in enumerate(zip(specs, ps, results)):
+        strat = res.strategy
+        gross = strat.full_duration(hw)
+        reuse_in = i > 0 and reuse_after[i - 1]
+        reuse_out = i < len(specs) - 1 and reuse_after[i]
+        in_saved = (spec.all_pixels_mask.bit_count() * hw.t_l
+                    if reuse_in else 0.0)
+        wb_saved = strat.write_back_duration(hw) if reuse_out else 0.0
+        lp = LayerPlan(index=i, spec=spec, p=pp, result=res,
+                       reuse_input=reuse_in, reuse_output=reuse_out,
+                       gross_duration=gross,
+                       input_load_saved=in_saved,
+                       write_back_saved=wb_saved)
+        layers.append(lp)
+        total += lp.duration
+        gross_total += gross
+
+    baseline = greedy_network_duration(specs, hw, p=p, max_group=max_group)
+    return NetworkPlan(
+        name=name, hw=hw, layers=tuple(layers),
+        total_duration=total, gross_duration=gross_total,
+        baseline_duration=baseline,
+        planning_seconds=planning_seconds,
+        solver_calls=solver_calls, cache_hits=cache_hits)

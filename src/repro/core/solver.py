@@ -16,8 +16,13 @@ The search space is restricted to K = K_min groups (Sec 7.1).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import functools
+import multiprocessing
+import os
 import random
+import sys
 from typing import Sequence
 
 import numpy as np
@@ -61,6 +66,19 @@ class SolveResult:
 
 _RELOAD_PENALTY = 10_000.0
 
+_EMPTY_IDX = np.empty(0, dtype=np.int64)
+
+
+def _mask_to_indices(mask: int, num_pixels: int) -> np.ndarray:
+    """Vectorised bitmask -> sorted pixel-index array (the polish hot path:
+    one unpackbits instead of a Python loop over set bits)."""
+    if mask == 0:
+        return _EMPTY_IDX
+    buf = mask.to_bytes((num_pixels + 7) // 8, "little")
+    bits = np.unpackbits(np.frombuffer(buf, dtype=np.uint8),
+                         bitorder="little")
+    return np.flatnonzero(bits[:num_pixels])
+
 
 class _SearchState:
     """Ordered partition with O(affected-groups) incremental cost."""
@@ -78,8 +96,7 @@ class _SearchState:
         for kk in range(self.k):
             isl = self._islice(kk)
             self.total_load += isl.bit_count()
-            for j in spec.pixels_of_mask(isl):
-                self.loads[j] += 1
+            self.loads[_mask_to_indices(isl, spec.num_pixels)] += 1
         self.violations = int(np.maximum(self.loads - self.r, 0).sum())
 
     def _islice(self, kk: int) -> int:
@@ -91,6 +108,7 @@ class _SearchState:
 
     # -- incremental update of steps' I_slices after group masks change --
     def _refresh_islices(self, ks: Sequence[int], old_islices: dict[int, int]):
+        npix = self.spec.num_pixels
         for kk in ks:
             old = old_islices[kk]
             new = self._islice(kk)
@@ -98,14 +116,14 @@ class _SearchState:
                 continue
             gone, came = old & ~new, new & ~old
             self.total_load += came.bit_count() - gone.bit_count()
-            for j in self.spec.pixels_of_mask(gone):
-                if self.loads[j] > self.r:
-                    self.violations -= 1
-                self.loads[j] -= 1
-            for j in self.spec.pixels_of_mask(came):
-                self.loads[j] += 1
-                if self.loads[j] > self.r:
-                    self.violations += 1
+            gi = _mask_to_indices(gone, npix)
+            if gi.size:
+                self.violations -= int((self.loads[gi] > self.r).sum())
+                self.loads[gi] -= 1
+            ci = _mask_to_indices(came, npix)
+            if ci.size:
+                self.loads[ci] += 1
+                self.violations += int((self.loads[ci] > self.r).sum())
 
     def _affected(self, ks: Sequence[int]) -> list[int]:
         out = set()
@@ -221,6 +239,58 @@ def polish(seed: GroupedStrategy, p: int, hw: HardwareModel,
     return best
 
 
+def _polish_task(args) -> GroupedStrategy:
+    seed, p, hw, nb_data_reload, iters, rng_seed = args
+    return polish(seed, p, hw, nb_data_reload, iters=iters,
+                  rng_seed=rng_seed)
+
+
+_POOLS: dict[tuple[str, int], concurrent.futures.ProcessPoolExecutor] = {}
+
+
+def _polish_pool(max_workers: int) -> concurrent.futures.ProcessPoolExecutor:
+    """Long-lived process pool, one per (start-method, size).
+
+    Re-used across solve calls so a network plan pays worker startup once,
+    not once per layer (concurrent.futures joins the workers at exit).
+    Forking a process that already initialised jax's thread pools can
+    deadlock, so spawn is used once jax is loaded — its higher startup
+    cost is exactly what the reuse amortises."""
+    method = "spawn" if "jax" in sys.modules else "fork"
+    key = (method, max_workers)
+    pool = _POOLS.get(key)
+    if pool is None:
+        pool = concurrent.futures.ProcessPoolExecutor(
+            max_workers, mp_context=multiprocessing.get_context(method))
+        _POOLS[key] = pool
+    return pool
+
+
+def polish_multi(seed: GroupedStrategy, p: int, hw: HardwareModel,
+                 nb_data_reload: int = 2, iters: int = 30_000,
+                 restarts: int = 4, rng_seed: int = 0,
+                 workers: int | None = None) -> GroupedStrategy:
+    """Best of ``restarts`` independent polish runs from distinct rng
+    streams, fanned out over a process pool (the multi-restart analogue of
+    CPLEX running its polishing heuristics in parallel).  Deterministic for
+    a fixed ``rng_seed``: the restart seeds are derived from it and the
+    argmin over their results does not depend on scheduling order."""
+    if restarts <= 1:
+        return polish(seed, p, hw, nb_data_reload, iters=iters,
+                      rng_seed=rng_seed)
+    tasks = [(seed, p, hw, nb_data_reload, iters, rng_seed + 1_000_003 * i)
+             for i in range(restarts)]
+    try:
+        max_workers = workers or min(restarts, os.cpu_count() or 1)
+        results = list(_polish_pool(max_workers).map(_polish_task, tasks))
+    except (OSError, concurrent.futures.process.BrokenProcessPool,
+            RuntimeError):
+        # sandboxed / fork-restricted environments: same seeds, serially
+        _POOLS.clear()
+        results = [_polish_task(t) for t in tasks]
+    return min(results, key=lambda s: (s.objective(hw), s.max_reloads()))
+
+
 # --------------------------------------------------------------------- #
 # HiGHS backend
 # --------------------------------------------------------------------- #
@@ -255,7 +325,9 @@ def solve(spec: ConvSpec, p: int, hw: HardwareModel,
           polish_iters: int = 30_000,
           milp_var_limit: int = 60_000,
           use_milp: bool = True,
-          rng_seed: int = 0) -> SolveResult:
+          rng_seed: int = 0,
+          polish_restarts: int = 1,
+          polish_workers: int | None = None) -> SolveResult:
     """Find the best S1 strategy for ``spec`` on ``hw`` with group size p."""
     k = k_min(spec, p)
     seeds = [row_by_row(spec, p), zigzag(spec, p),
@@ -263,8 +335,9 @@ def solve(spec: ConvSpec, p: int, hw: HardwareModel,
     mip_start = min(seeds[:2], key=lambda s: s.objective(hw))  # paper's seed
     incumbent = min(seeds, key=lambda s: s.objective(hw))
 
-    polished = polish(incumbent, p, hw, nb_data_reload,
-                      iters=polish_iters, rng_seed=rng_seed)
+    polished = polish_multi(incumbent, p, hw, nb_data_reload,
+                            iters=polish_iters, restarts=polish_restarts,
+                            rng_seed=rng_seed, workers=polish_workers)
     if polished.objective(hw) < incumbent.objective(hw) and \
             polished.max_reloads() <= max(nb_data_reload,
                                           incumbent.max_reloads()):
@@ -293,3 +366,25 @@ def solve(spec: ConvSpec, p: int, hw: HardwareModel,
         milp_objective=milp_obj,
         polish_objective=polished.objective(hw),
         reload_ok=incumbent.max_reloads() <= nb_data_reload)
+
+
+# --------------------------------------------------------------------- #
+# Solve cache — repeated layers (ResNet stages) are solved once.
+# All key components are frozen dataclasses, hence hashable.
+# --------------------------------------------------------------------- #
+
+@functools.lru_cache(maxsize=256)
+def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
+                 nb_data_reload: int = 2,
+                 time_limit: float = 30.0,
+                 polish_iters: int = 30_000,
+                 use_milp: bool = True,
+                 rng_seed: int = 0,
+                 polish_restarts: int = 1) -> SolveResult:
+    """LRU-cached ``solve`` keyed on (spec, p, hw, nb_data_reload, ...).
+    ``solve_cached.cache_info()`` exposes the hit counters the network
+    planner reports."""
+    return solve(spec, p, hw, nb_data_reload=nb_data_reload,
+                 time_limit=time_limit, polish_iters=polish_iters,
+                 use_milp=use_milp, rng_seed=rng_seed,
+                 polish_restarts=polish_restarts)

@@ -119,6 +119,32 @@ class GroupedStrategy:
         """max_k |pixels(g_k)| in spatial units."""
         return max(self.spec.group_mask(g).bit_count() for g in self.groups)
 
+    def peak_footprint_elements(self) -> int:
+        """Upper bound on resident tensor elements during any step: the
+        kernel set Λ, the largest group's input pixels (channel-expanded),
+        and two groups' outputs (write-back happens at the *next* step, so
+        the previous group's outputs coexist with the current one's)."""
+        return (self.spec.kernel_elements
+                + self.peak_input_footprint() * self.spec.c_in
+                + 2 * self.max_group_size() * self.spec.c_out)
+
+    # -- full Def-3 accounting (network-level planning) ----------------- #
+    def kernel_load_duration(self, hw: HardwareModel) -> float:
+        """t_l cost of loading Λ once (K_sub of step 1, element units)."""
+        return self.spec.kernel_elements * hw.t_l
+
+    def write_back_duration(self, hw: HardwareModel) -> float:
+        """t_w cost of writing every output column back (spatial units)."""
+        return self.spec.num_patches * hw.t_w
+
+    def full_duration(self, hw: HardwareModel) -> float:
+        """Def-3 duration of the materialised ``to_steps()`` sequence:
+        eq. 15 plus the kernel load and output write-back that the paper's
+        Sec 5.4/7.1 experiments exclude.  Matches the Sec-6 simulator
+        exactly (see tests/test_network_planner.py)."""
+        return (self.objective(hw) + self.kernel_load_duration(hw)
+                + self.write_back_duration(hw))
+
 
 # ---------------------------------------------------------------------- #
 # Group builders

@@ -35,7 +35,7 @@ import time
 import jax
 
 from repro.launch import steps
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import enter_mesh, make_production_mesh
 from repro.models import registry
 from repro.models.common import SHAPES, Axes, cell_applicable
 
@@ -103,29 +103,29 @@ def lower_cell(arch: str, shape: str, multi_pod: bool):
                 "status": "skipped", "reason": why}
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = Axes.for_mesh(mesh)
-    jax.set_mesh(mesh)
-    t0 = time.time()
-    if cell.kind == "train":
-        jitted = steps.jit_train_step(api, axes, cell)
-        args = steps.abstract_train_args(api, cell, axes)
-    elif cell.kind == "prefill":
-        jitted = steps.jit_prefill_step(api, axes, cell)
-        args = steps.abstract_serve_args(api, cell, axes)
-    else:
-        jitted = steps.jit_decode_step(api, axes, cell)
-        args = steps.abstract_serve_args(api, cell, axes)
-    lowered = jitted.lower(*args)
-    t_lower = time.time() - t0
+    with enter_mesh(mesh):
+        t0 = time.time()
+        if cell.kind == "train":
+            jitted = steps.jit_train_step(api, axes, cell)
+            args = steps.abstract_train_args(api, cell, axes)
+        elif cell.kind == "prefill":
+            jitted = steps.jit_prefill_step(api, axes, cell)
+            args = steps.abstract_serve_args(api, cell, axes)
+        else:
+            jitted = steps.jit_decode_step(api, axes, cell)
+            args = steps.abstract_serve_args(api, cell, axes)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
 
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    from repro.launch import hlo_stats
+    cost = hlo_stats.cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     colls = collective_bytes(hlo)          # raw text scan (bodies once)
-    from repro.launch import hlo_stats
     stats = hlo_stats.analyze(hlo)         # trip-count-corrected roll-up
 
     result = {

@@ -49,6 +49,19 @@ _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "iota"}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalise ``Compiled.cost_analysis()`` across jax versions.
+
+    Old jax returns a one-element list of per-program dicts; newer jax
+    returns the dict directly.  Either way callers get a plain dict
+    (possibly empty when the backend reports nothing).
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
 def _shape_dims(shape_str: str) -> list[tuple[str, list[int]]]:
     out = []
     for m in _SHAPE_RE.finditer(shape_str):

@@ -7,6 +7,7 @@ generation on CPU with the reduced config."""
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -14,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.mesh import enter_mesh, make_production_mesh, \
+    make_smoke_mesh
 from repro.models import registry
 from repro.models.common import Axes
 
@@ -22,14 +24,20 @@ from repro.models.common import Axes
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 32, gen_len: int = 16,
           multi_pod: bool = False, greedy: bool = True):
-    if smoke:
-        api = registry.get_reduced(arch)
-        axes = None
-    else:
-        api = registry.get(arch)
-        mesh = make_production_mesh(multi_pod=multi_pod)
-        jax.set_mesh(mesh)
-        axes = Axes.for_mesh(mesh)
+    with contextlib.ExitStack() as mesh_ctx:
+        if smoke:
+            api = registry.get_reduced(arch)
+            axes = None
+        else:
+            api = registry.get(arch)
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            mesh_ctx.enter_context(enter_mesh(mesh))
+            axes = Axes.for_mesh(mesh)
+        return _serve_loop(api, axes, batch=batch, prompt_len=prompt_len,
+                           gen_len=gen_len)
+
+
+def _serve_loop(api, axes, *, batch, prompt_len, gen_len):
     cfg = api.cfg
     max_len = prompt_len + gen_len
 

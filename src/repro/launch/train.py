@@ -15,6 +15,7 @@ deterministic pipeline resumes from it (exactly-once).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -23,7 +24,8 @@ import numpy as np
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, Pipeline, SyntheticLM
 from repro.launch import steps as steps_mod
-from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.launch.mesh import enter_mesh, make_production_mesh, \
+    make_smoke_mesh
 from repro.models import registry
 from repro.models.common import Axes, ShapeCell
 from repro.optim import adamw
@@ -34,15 +36,25 @@ def train(arch: str, *, smoke: bool = True, steps: int = 10,
           checkpoint_every: int = 50, lr: float = 3e-4,
           log_every: int = 10, multi_pod: bool = False,
           num_microbatches: int = 1):
-    if smoke:
-        api = registry.get_reduced(arch)
-        mesh = make_smoke_mesh()
-        axes = None                      # un-meshed fast path on 1 device
-    else:
-        api = registry.get(arch)
-        mesh = make_production_mesh(multi_pod=multi_pod)
-        jax.set_mesh(mesh)
-        axes = Axes.for_mesh(mesh)
+    with contextlib.ExitStack() as mesh_ctx:
+        if smoke:
+            api = registry.get_reduced(arch)
+            mesh = make_smoke_mesh()
+            axes = None                  # un-meshed fast path on 1 device
+        else:
+            api = registry.get(arch)
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            mesh_ctx.enter_context(enter_mesh(mesh))
+            axes = Axes.for_mesh(mesh)
+        return _train_loop(api, axes, steps=steps, batch=batch,
+                           seq_len=seq_len, ckpt_dir=ckpt_dir,
+                           checkpoint_every=checkpoint_every, lr=lr,
+                           log_every=log_every,
+                           num_microbatches=num_microbatches)
+
+
+def _train_loop(api, axes, *, steps, batch, seq_len, ckpt_dir,
+                checkpoint_every, lr, log_every, num_microbatches):
     cfg = api.cfg
 
     pipe = Pipeline(SyntheticLM(vocab=cfg.vocab, seed=0),

@@ -9,8 +9,10 @@ final DRAM output is checked against a reference convolution.
 from repro.sim.accelerator import Accelerator, OnChipMemory
 from repro.sim.dram import Dram
 from repro.sim.layer import ConvLayer
+from repro.sim.network import NetworkSimReport, simulate_network
 from repro.sim.system import SimReport, System
 from repro.sim.functional import reference_conv
 
 __all__ = ["Accelerator", "OnChipMemory", "Dram", "ConvLayer",
-           "System", "SimReport", "reference_conv"]
+           "System", "SimReport", "reference_conv",
+           "NetworkSimReport", "simulate_network"]

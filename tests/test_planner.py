@@ -1,12 +1,17 @@
 """Planner property tests (hypothesis): the offloading-schedule chooser
 must always respect VMEM, cover the problem, and price durations
-consistently with the paper's model."""
+consistently with the paper's model.  Deterministic planner tests live in
+test_planner_basic.py; this module skips cleanly without hypothesis."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import planner
 from repro.core.conv_spec import ConvSpec
-from repro.core.cost_model import TPU_V5E, HardwareModel, TpuChipModel
+from repro.core.cost_model import TPU_V5E
 
 
 @settings(max_examples=25, deadline=None)
@@ -48,30 +53,3 @@ def test_property_conv_plan_invariants(hw_in, c_in, n, kk):
     lb = 2 * (spec.all_pixels_mask.bit_count() * c_in
               + spec.kernel_elements + spec.num_patches * n)
     assert p.hbm_bytes >= lb
-
-
-def test_gemm_order_pricing_matches_intuition():
-    """For tall-skinny C with huge K, an A-revisiting order beats naive
-    re-streaming — the planner must see that (the paper's 'strategy choice
-    matters' claim transplanted to GeMM)."""
-    # square big matmul: output-stationary should win (C never RMW'd)
-    p = planner.plan_matmul(8192, 8192, 8192)
-    assert p.order.endswith("k")
-
-
-def test_tpu_hardware_model_translation():
-    hw = TPU_V5E.as_hardware_model(dtype_bytes=2)
-    assert hw.nbop_pe == int(197e12 / 2)
-    assert abs(hw.t_l - 2 / 819e9) < 1e-18
-    assert hw.size_mem == 128 * 1024 * 1024 // 2
-
-
-def test_chip_model_roofline_crossover():
-    """Arithmetic-intensity crossover: ops with AI above peak/bw are
-    compute-bound in the planner's overlapped model."""
-    crossover = TPU_V5E.peak_flops / TPU_V5E.hbm_bw      # ~240 flops/byte
-    p_big = planner.plan_matmul(8192, 8192, 8192)        # AI >> crossover
-    assert p_big.duration_overlapped == p_big.flops / TPU_V5E.peak_flops
-    p_small = planner.plan_matmul(128, 128, 128)         # AI << crossover
-    assert p_small.duration_overlapped > \
-        p_small.flops / TPU_V5E.peak_flops
