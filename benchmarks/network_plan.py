@@ -1,14 +1,23 @@
-"""Network-planning benchmark: plan whole conv networks (LeNet-5, ResNet-8)
-and compare the predicted schedule against the per-layer-greedy baseline
-(best Row-by-Row/ZigZag heuristic, no polish, no inter-layer reuse).
+"""Network-planning benchmark: plan whole conv networks (LeNet-5, ResNet-8,
+tight-budget variants) and compare the predicted schedule against the
+per-layer-greedy baseline (best feasible Row-by-Row/ZigZag heuristic or S2
+fallback, no polish, no inter-layer reuse).
 
 Emits one JSON per run with planning throughput (layers/sec), the total
-predicted duration for plan vs. baseline, per-layer critical-path rows, and
-the solve-cache hit rate.
+predicted duration for plan vs. baseline, per-layer critical-path rows, the
+solve-cache hit rate, and — with ``--sweep-mem`` — a tight-memory sweep
+over a (size_mem x network) grid showing the S1→S2 crossover: budgets
+below the largest layer's kernel set force the kernel-group-swapping
+fallback, and the plan must stay feasible and keep beating greedy.
 
     PYTHONPATH=src python -m benchmarks.network_plan \
-        [--networks lenet5 resnet8] [--size-mem N] [--restarts 4] \
-        [--iters 6000] [--out benchmarks/results/network_plan.json]
+        [--networks lenet5 resnet8 tight4] [--size-mem N] \
+        [--sweep-mem auto | --sweep-mem 2000 8000 ...] \
+        [--restarts 4] [--iters 6000] [--fast] \
+        [--out benchmarks/results/network_plan.json]
+
+``--fast`` is the CI smoke target: tiny polish budgets, the small
+networks, and an automatic sweep (seconds, not minutes).
 """
 from __future__ import annotations
 
@@ -19,21 +28,28 @@ import sys
 import time
 
 from repro.configs.networks import NETWORKS
+from repro.configs.tight import budget_points
 from repro.core import solver
 from repro.core.cost_model import HardwareModel
-from repro.core.network_planner import plan_network
+from repro.core.network_planner import InfeasibleNetworkError, plan_network
 
 
 def bench_network(name: str, hw: HardwareModel, *, iters: int,
                   restarts: int, rng_seed: int) -> dict:
     specs = NETWORKS[name]
     t0 = time.perf_counter()
-    plan = plan_network(specs, hw, name=name, polish_iters=iters,
-                        polish_restarts=restarts, rng_seed=rng_seed)
+    try:
+        plan = plan_network(specs, hw, name=name, polish_iters=iters,
+                            polish_restarts=restarts, rng_seed=rng_seed)
+    except InfeasibleNetworkError as e:
+        return {"network": name, "feasible": False, "error": str(e)}
     wall = time.perf_counter() - t0
     return {
         "network": name,
+        "feasible": True,
         "n_layers": plan.n_layers,
+        "n_s2_layers": plan.n_s2_layers,
+        "peak_footprint": plan.peak_footprint,
         "planning_wall_s": round(wall, 4),
         "planning_layers_per_s": round(plan.n_layers / max(wall, 1e-9), 2),
         "solver_calls": plan.solver_calls,
@@ -51,40 +67,97 @@ def bench_network(name: str, hw: HardwareModel, *, iters: int,
              "shape": f"{lp.spec.c_in}x{lp.spec.h_in}x{lp.spec.w_in}"
                       f"->{lp.spec.c_out}x{lp.spec.h_out}x{lp.spec.w_out}",
              "p": lp.p,
+             "mode": lp.mode,
              "strategy": lp.strategy.name,
              "steps": lp.strategy.n_steps,
+             "peak_footprint": lp.strategy.peak_footprint_elements(),
              "duration": lp.duration,
              "gross_duration": lp.gross_duration,
              "optimality_gap": round(lp.result.gap, 4),
              "reuse_input": lp.reuse_input,
-             "reuse_output": lp.reuse_output}
+             "reuse_output": lp.reuse_output,
+             "window_rows": lp.window_rows}
             for lp in plan.layers],
     }
 
 
+def sweep_tight_memory(name: str, budgets: list[int], *, nbop_pe: int,
+                       iters: int, restarts: int, rng_seed: int) -> dict:
+    """Plan ``name`` under every budget: the S1→S2 crossover grid."""
+    rows = []
+    for size_mem in budgets:
+        hw = HardwareModel(nbop_pe=nbop_pe, size_mem=size_mem)
+        try:
+            plan = plan_network(NETWORKS[name], hw, name=name,
+                                polish_iters=iters,
+                                polish_restarts=restarts, rng_seed=rng_seed)
+        except InfeasibleNetworkError as e:
+            rows.append({"size_mem": size_mem, "feasible": False,
+                         "error": str(e)})
+            continue
+        rows.append({
+            "size_mem": size_mem,
+            "feasible": True,
+            "n_s2_layers": plan.n_s2_layers,
+            "peak_footprint": plan.peak_footprint,
+            "total_duration": plan.total_duration,
+            "greedy_baseline_duration": plan.baseline_duration,
+            "gain_vs_baseline": round(plan.gain_vs_baseline, 4),
+            "beats_baseline": plan.total_duration < plan.baseline_duration,
+            "layer_modes": [lp.mode for lp in plan.layers],
+        })
+    return {"network": name, "points": rows}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--networks", nargs="+", default=sorted(NETWORKS),
+    ap.add_argument("--networks", nargs="+", default=None,
                     choices=sorted(NETWORKS))
     ap.add_argument("--size-mem", type=int, default=None,
                     help="on-chip budget in elements (default: unconstrained,"
                          " the paper's Sec-7.1 setting)")
+    ap.add_argument("--sweep-mem", nargs="+", default=None,
+                    help="budgets for the tight-memory sweep: explicit "
+                         "element counts, or 'auto' for fractions of each "
+                         "network's largest kernel set")
     ap.add_argument("--nbop-pe", type=int, default=10 ** 9)
     ap.add_argument("--iters", type=int, default=6000)
     ap.add_argument("--restarts", type=int, default=4)
     ap.add_argument("--rng-seed", type=int, default=0)
+    ap.add_argument("--fast", action="store_true",
+                    help="smoke preset: small networks, tiny polish budget, "
+                         "auto sweep")
     ap.add_argument("--out", default="benchmarks/results/network_plan.json")
     args = ap.parse_args(argv)
+
+    if args.fast:
+        args.networks = args.networks or ["lenet5", "tight2"]
+        args.iters = min(args.iters, 300)
+        args.restarts = min(args.restarts, 1)
+        args.sweep_mem = args.sweep_mem or ["auto"]
+    networks = args.networks or sorted(NETWORKS)
 
     hw = HardwareModel(nbop_pe=args.nbop_pe, size_mem=args.size_mem)
     solver.solve_cached.cache_clear()
     rows = [bench_network(n, hw, iters=args.iters, restarts=args.restarts,
-                          rng_seed=args.rng_seed) for n in args.networks]
+                          rng_seed=args.rng_seed) for n in networks]
+
+    sweeps = []
+    if args.sweep_mem:
+        for n in networks:
+            if args.sweep_mem == ["auto"]:
+                budgets = budget_points(NETWORKS[n])
+            else:
+                budgets = sorted(int(b) for b in args.sweep_mem)
+            sweeps.append(sweep_tight_memory(
+                n, budgets, nbop_pe=args.nbop_pe, iters=args.iters,
+                restarts=args.restarts, rng_seed=args.rng_seed))
 
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
-              "networks": rows}
+              "networks": rows,
+              "tight_memory_sweep": sweeps}
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -92,6 +165,10 @@ def main(argv=None) -> int:
         json.dump(result, f, indent=1)
 
     for r in rows:
+        if not r["feasible"]:
+            print(f"[network_plan] {r['network']}: INFEASIBLE under "
+                  f"size_mem={args.size_mem} ({r['error']})")
+            continue
         print(f"[network_plan] {r['network']}: "
               f"planned {r['n_layers']} layers in {r['planning_wall_s']}s "
               f"({r['planning_layers_per_s']} layers/s, "
@@ -99,8 +176,25 @@ def main(argv=None) -> int:
               f"predicted {r['total_duration']:g} vs greedy "
               f"{r['greedy_baseline_duration']:g} "
               f"(gain {r['gain_vs_baseline']:.1%})")
+    for sw in sweeps:
+        for pt in sw["points"]:
+            if not pt["feasible"]:
+                print(f"[sweep] {sw['network']} mem={pt['size_mem']}: "
+                      f"infeasible")
+                continue
+            print(f"[sweep] {sw['network']} mem={pt['size_mem']}: "
+                  f"{pt['n_s2_layers']} S2 layers, "
+                  f"plan {pt['total_duration']:g} vs greedy "
+                  f"{pt['greedy_baseline_duration']:g} "
+                  f"(gain {pt['gain_vs_baseline']:.1%})")
     print("saved ->", args.out)
-    return 0 if all(r["beats_baseline"] for r in rows) else 1
+
+    ok = all(r["feasible"] and r["beats_baseline"] for r in rows)
+    # the sweep must stay feasible and beat greedy on >= 1 budget point
+    for sw in sweeps:
+        feas = [p for p in sw["points"] if p["feasible"]]
+        ok = ok and bool(feas) and any(p["beats_baseline"] for p in feas)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Registry of conv-network workloads for the network-level planner."""
-from repro.configs import lenet5, resnet8
+from repro.configs import lenet5, resnet8, tight
 
 NETWORKS = {
     "lenet5": lenet5.LAYERS,
     "resnet8": resnet8.LAYERS,
+    "tight4": tight.LAYERS,
+    "tight2": tight.LAYERS_SMALL,
 }

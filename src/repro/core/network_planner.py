@@ -21,29 +21,80 @@ ResNet-8, ... in ``repro.configs``).  This module plans the whole sequence:
      formalism.  Elementwise ops between convs (ReLU, pooling) are assumed
      fused on-chip and free, per the usual accelerator dataflow.
 
+Memory feasibility — the S1/S2 selection rule
+--------------------------------------------
+Every planned strategy must satisfy ``peak_footprint_elements() <=
+hw.size_mem``.  Per layer, ``solver.solve_cached`` applies the rule:
+
+  * solve S1 at the largest group size ``p' <= p`` whose contiguous
+    strategy fits the budget (``solver.s1_max_feasible_p``);
+  * when the budget forced ``p' < p`` — or no S1 group size fits at all,
+    e.g. the kernel set Λ alone exceeds ``size_mem`` — price the S2
+    kernel-group-swapping alternative (``strategies_s2.best_s2``, the
+    paper's Sec-9 future-work regime) with the same full Def-3 accounting
+    and keep the cheaper feasible one.
+
+Both strategy families expose one protocol (``n_steps``, ``objective``,
+``full_duration``, ``write_back_duration``, ``first_load_duration``,
+``peak_footprint_elements``, ``peak_working_set_elements``,
+``max_group_size``), so everything downstream — reuse gating, duration
+accounting, simulation, benchmarks — treats them polymorphically.
+``plan_network`` raises :class:`InfeasibleNetworkError` instead of ever
+returning a plan whose peak footprint exceeds the budget.
+
+Row-window (partial) cascading
+------------------------------
+When the full activation does not fit next to a neighbour's working set,
+the planner falls back to holding only a *row window* of the consumer's
+input on-chip: ``W`` rows (``W * w_in * c_in`` elements) stay resident,
+saving the first loads of exactly those rows' pixels.  The fit condition is
+
+    W * w_in * c_in  <=  size_mem - max(producer peak working set,
+                                        consumer peak footprint)
+
+with ``W >= h_k`` (at least one halo-extended output-row window, following
+Stoutchinin et al.'s layer-cascade scheduling); the producer still writes
+every output back (the window is a retained copy), so only consumer-side
+first loads are saved.  Savings are always clamped to the consumer
+strategy's measured first-load traffic and every ``LayerPlan.duration`` is
+asserted non-negative.
+
 ``plan_network`` returns a ``NetworkPlan`` with per-layer strategies, the
 aggregate predicted duration, the per-layer-greedy baseline (no reuse, no
-polish — what a layer-at-a-time compiler would emit), and a critical-path
-report naming the layers that dominate the schedule.
+polish — what a layer-at-a-time compiler would emit, under the same
+feasibility rule), and a critical-path report naming the layers that
+dominate the schedule.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from typing import Callable, Sequence, Union
 
 from repro.core import solver as solver_mod
 from repro.core.conv_spec import ConvSpec
 from repro.core.cost_model import HardwareModel
-from repro.core.strategies import GroupedStrategy, best_heuristic
+from repro.core.strategies import GroupedStrategy, row_by_row, zigzag
+from repro.core.strategies_s2 import S2Strategy
+
+Strategy = Union[GroupedStrategy, S2Strategy]
+
+
+class InfeasibleNetworkError(ValueError):
+    """No strategy family fits a layer under ``hw.size_mem``."""
 
 
 def resolve_group_size(spec: ConvSpec, hw: HardwareModel,
                        max_group: int | None = 16) -> int:
     """nb_patches_max_S1 (Sec 4.2) clipped to the patch count and to an
     optional planning cap (huge PEs would otherwise allow one giant group,
-    which blows up the tiled-shape enumeration without helping reuse)."""
-    p = hw.nb_patches_max_s1(spec.nb_op_value, spec.c_out)
+    which blows up the tiled-shape enumeration without helping reuse).
+    Returns 1 when the PE cannot take one full S1 patch row — the solver
+    then falls back to S2 kernel-group swapping."""
+    try:
+        p = hw.nb_patches_max_s1(spec.nb_op_value, spec.c_out)
+    except ValueError:
+        return 1
     p = min(p, spec.num_patches)
     if max_group is not None:
         p = min(p, max_group)
@@ -58,15 +109,29 @@ class LayerPlan:
     spec: ConvSpec
     p: int
     result: solver_mod.SolveResult
-    reuse_input: bool       # input arrives on-chip from the previous layer
-    reuse_output: bool      # output held on-chip for the next layer
+    reuse_input: bool       # ALL first loads arrive from the previous layer
+    reuse_output: bool      # output held on-chip for the next layer (no wb)
+    window_rows: int        # >0: only this many input rows held (partial)
     gross_duration: float   # full Def-3 duration, no inter-layer reuse
-    input_load_saved: float  # t_l saved on first loads when reuse_input
+    input_load_saved: float  # t_l saved on first loads (full or window)
     write_back_saved: float  # t_w saved when reuse_output
 
+    def __post_init__(self):
+        if self.duration < -1e-9:
+            raise AssertionError(
+                f"layer {self.index}: negative net duration "
+                f"{self.duration} (gross {self.gross_duration}, "
+                f"in_saved {self.input_load_saved}, "
+                f"wb_saved {self.write_back_saved})")
+
     @property
-    def strategy(self) -> GroupedStrategy:
+    def strategy(self) -> Strategy:
         return self.result.strategy
+
+    @property
+    def mode(self) -> str:
+        """'s1' or 's2' (kernel-group swapping fallback)."""
+        return self.result.mode
 
     @property
     def duration(self) -> float:
@@ -92,6 +157,14 @@ class NetworkPlan:
     @property
     def n_layers(self) -> int:
         return len(self.layers)
+
+    @property
+    def n_s2_layers(self) -> int:
+        return sum(1 for lp in self.layers if lp.mode == "s2")
+
+    @property
+    def peak_footprint(self) -> int:
+        return max(lp.strategy.peak_footprint_elements() for lp in self.layers)
 
     @property
     def gain_vs_baseline(self) -> float:
@@ -123,6 +196,8 @@ class NetworkPlan:
             tags = []
             if lp.reuse_input:
                 tags.append("in<-chip")
+            elif lp.window_rows:
+                tags.append(f"win{lp.window_rows}<-chip")
             if lp.reuse_output:
                 tags.append("out->chip")
             lines.append(
@@ -147,43 +222,117 @@ class NetworkPlan:
 # Inter-layer reuse feasibility
 # --------------------------------------------------------------------- #
 
-def activation_fits(prev: ConvSpec, prev_strategy: GroupedStrategy,
-                    nxt: ConvSpec, nxt_strategy: GroupedStrategy,
-                    hw: HardwareModel) -> bool:
-    """Can layer ``prev``'s output stay resident until ``nxt`` consumed it?
+def _held_elements(prev: ConvSpec, nxt: ConvSpec) -> int:
+    """Resident elements of a fully held activation: the larger of prev's
+    output map and nxt's input map (pooling/padding between them happens
+    on-chip)."""
+    return max(prev.num_patches * prev.c_out, nxt.num_pixels * nxt.c_in)
 
-    Both ends must fit: while ``prev`` executes, its accumulating output
-    map (no longer drained by write-backs) coexists with prev's own
-    working set; while ``nxt`` executes, the held activation (the larger
-    of prev's output map and nxt's input map, since pooling/padding
-    between them happens on-chip) coexists with nxt's peak working set
-    (kernels + largest group's pixels + outputs).  ``size_mem=None`` is
-    the paper's unconstrained Sec-7.1 setting: always fits.
+
+def activation_fits(prev: ConvSpec, prev_strategy: Strategy,
+                    nxt: ConvSpec, nxt_strategy: Strategy,
+                    hw: HardwareModel,
+                    producer_extra_held: int = 0) -> bool:
+    """Can layer ``prev``'s output stay fully resident until ``nxt``
+    consumed it?
+
+    Both ends must fit, using the unified strategy-protocol accounting:
+    while ``prev`` executes, the accumulating held map (no longer drained
+    by write-backs) coexists with prev's peak *working set* — for S2
+    producers that is the largest (input pixels + swapped kernel group) of
+    any step, so S2 layers keep producer-side residency only when the held
+    map fits next to the swapped kernel groups; while ``nxt`` executes,
+    the held activation coexists with nxt's peak footprint.
+
+    ``producer_extra_held`` counts elements already resident while
+    ``prev`` executes — its own held *input* map when the previous pair
+    also reuses (a middle layer holds both maps at once).
+    ``size_mem=None`` is the paper's unconstrained Sec-7.1 setting:
+    always fits.
     """
     if hw.size_mem is None:
         return True
-    held = max(prev.num_patches * prev.c_out,
-               nxt.num_pixels * nxt.c_in)
-    producer_ok = (held + prev.kernel_elements
-                   + prev_strategy.peak_input_footprint() * prev.c_in
+    held = _held_elements(prev, nxt)
+    producer_ok = (held + producer_extra_held
+                   + prev_strategy.peak_working_set_elements()
                    <= hw.size_mem)
     consumer_ok = held + nxt_strategy.peak_footprint_elements() \
         <= hw.size_mem
     return producer_ok and consumer_ok
 
 
+def row_window_rows(prev: ConvSpec, prev_strategy: Strategy,
+                    nxt: ConvSpec, nxt_strategy: Strategy,
+                    hw: HardwareModel,
+                    producer_extra_held: int = 0) -> int:
+    """Partial (row-window) cascading: how many of the consumer's input
+    rows can stay resident when the full activation does not fit.
+
+    The window (``W * w_in * c_in`` elements) must coexist with the
+    producer's peak *footprint* while the producer finishes (in the window
+    regime the producer still drains outputs through write-backs, so its
+    output buffers stay resident — unlike full residency where they
+    accumulate into the held map) AND with the consumer's peak footprint
+    while it is consumed; it must cover at least one halo-extended
+    output-row window (``h_k`` input rows).  ``producer_extra_held`` is
+    the producer's own held input map, as in :func:`activation_fits`.
+    Returns 0 when no admissible window exists."""
+    if hw.size_mem is None:
+        return 0                      # full residency always fits
+    per_row = nxt.w_in * nxt.c_in
+    spare = hw.size_mem - max(
+        prev_strategy.peak_footprint_elements() + producer_extra_held,
+        nxt_strategy.peak_footprint_elements())
+    if spare < per_row:
+        return 0
+    rows = min(spare // per_row, nxt.h_in)
+    return rows if rows >= nxt.h_k else 0
+
+
+def _window_load_saved(nxt: ConvSpec, rows: int, hw: HardwareModel) -> float:
+    """t_l saved by serving the first ``rows`` input rows' first loads
+    from the held window (only pixels some patch actually needs count)."""
+    mask = (1 << (rows * nxt.w_in)) - 1
+    return (mask & nxt.all_pixels_mask).bit_count() * hw.t_l
+
+
 # --------------------------------------------------------------------- #
 # Baselines
 # --------------------------------------------------------------------- #
 
+def greedy_feasible_strategy(spec: ConvSpec, p: int,
+                             hw: HardwareModel) -> Strategy:
+    """Per-layer-greedy choice under the memory-feasibility rule: best of
+    the paper's two heuristics (Row-by-Row / ZigZag) at the largest
+    budget-feasible group size, else the S2 kernel-group-swapping
+    fallback.  Raises :class:`InfeasibleNetworkError` when nothing fits."""
+    p_fit = solver_mod.s1_max_feasible_p(spec, p, hw)
+    if p_fit is not None:
+        cands = [row_by_row(spec, p_fit), zigzag(spec, p_fit)]
+        if hw.size_mem is not None:
+            cands = [s for s in cands
+                     if s.peak_footprint_elements() <= hw.size_mem]
+        if cands:
+            return min(cands, key=lambda s: s.objective(hw))
+    try:
+        return solver_mod.best_s2_cached(spec, hw).strategy
+    except ValueError as e:
+        raise InfeasibleNetworkError(
+            f"no S1 or S2 strategy fits size_mem={hw.size_mem} "
+            f"for layer {spec}") from e
+
+
 def greedy_network_duration(specs: Sequence[ConvSpec], hw: HardwareModel,
                             p: int | Sequence[int] | None = None,
                             max_group: int | None = 16) -> float:
-    """Per-layer-greedy baseline: every layer takes the best of the paper's
-    two heuristics (Row-by-Row / ZigZag), no polish, no MILP, and every
-    activation makes the full HBM round trip (write-back + reload)."""
+    """Per-layer-greedy baseline: every layer takes the best *feasible*
+    heuristic (Row-by-Row / ZigZag, shrunk to fit the budget, or the S2
+    fallback), no polish, no MILP, and every activation makes the full HBM
+    round trip (write-back + reload).  Raises
+    :class:`InfeasibleNetworkError` instead of pricing an infeasible
+    schedule."""
     ps = _resolve_ps(specs, hw, p, max_group)
-    return sum(best_heuristic(spec, pp, hw).full_duration(hw)
+    return sum(greedy_feasible_strategy(spec, pp, hw).full_duration(hw)
                for spec, pp in zip(specs, ps))
 
 
@@ -220,6 +369,9 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
                  ) -> NetworkPlan:
     """Solve every layer and assemble the network schedule.
 
+    Every returned strategy is feasible under ``hw.size_mem`` (S1, shrunk
+    S1, or the S2 kernel-group-swapping fallback — see the module note);
+    :class:`InfeasibleNetworkError` is raised when a layer fits no family.
     Deterministic for fixed ``rng_seed`` (restart seeds are derived from
     it; see ``solver.polish_multi``).  ``solve_fn`` overrides the cached
     solver (tests / custom search)."""
@@ -235,12 +387,30 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
         hits0, calls0 = info.hits, info.hits + info.misses
 
     t0 = time.perf_counter()
-    results = [fn(spec, pp, hw, nb_data_reload=nb_data_reload,
-                  time_limit=time_limit, polish_iters=polish_iters,
-                  use_milp=use_milp, rng_seed=rng_seed,
-                  polish_restarts=polish_restarts)
-               for spec, pp in zip(specs, ps)]
+    results = []
+    for i, (spec, pp) in enumerate(zip(specs, ps)):
+        try:
+            results.append(
+                fn(spec, pp, hw, nb_data_reload=nb_data_reload,
+                   time_limit=time_limit, polish_iters=polish_iters,
+                   use_milp=use_milp, rng_seed=rng_seed,
+                   polish_restarts=polish_restarts))
+        except ValueError as e:
+            raise InfeasibleNetworkError(
+                f"layer {i} ({spec.c_in}x{spec.h_in}x{spec.w_in}"
+                f"->{spec.c_out}): no strategy fits "
+                f"size_mem={hw.size_mem}") from e
     planning_seconds = time.perf_counter() - t0
+
+    # feasibility validation: never emit a plan whose peak exceeds the
+    # budget (regression guard for custom solve_fn paths too).
+    if hw.size_mem is not None:
+        for i, res in enumerate(results):
+            peak = res.strategy.peak_footprint_elements()
+            if peak > hw.size_mem:
+                raise InfeasibleNetworkError(
+                    f"layer {i}: strategy {res.strategy.name} peak "
+                    f"footprint {peak} exceeds size_mem={hw.size_mem}")
 
     cache_hits = solver_calls = 0
     if fn is solver_mod.solve_cached:
@@ -248,27 +418,59 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
         cache_hits = info.hits - hits0
         solver_calls = (info.hits + info.misses) - calls0
 
-    # inter-layer reuse: decide for every adjacent pair whether the
-    # activation stays on-chip.
-    reuse_after = []                      # reuse_after[i]: i -> i+1 held
+    # inter-layer reuse: for every adjacent pair, hold the full activation
+    # on-chip if it fits, else the largest admissible row window.  The
+    # decision is sequential: a middle layer holding its input map (from
+    # the previous pair) has less room for an accumulating output map, so
+    # the producer-side check carries that already-held amount forward.
+    # reuse_after[i]: ("full", 0) | ("window", rows) | None   for i -> i+1
+    reuse_after: list[tuple[str, int] | None] = []
     for i in range(len(specs) - 1):
-        reuse_after.append(
-            allow_reuse and activation_fits(
-                specs[i], results[i].strategy,
-                specs[i + 1], results[i + 1].strategy, hw))
+        held_in = 0                  # resident while layer i executes
+        if i > 0 and reuse_after[i - 1] is not None:
+            kind, rows = reuse_after[i - 1]
+            held_in = (_held_elements(specs[i - 1], specs[i])
+                       if kind == "full"
+                       else rows * specs[i].w_in * specs[i].c_in)
+        choice: tuple[str, int] | None = None
+        if allow_reuse:
+            if activation_fits(specs[i], results[i].strategy,
+                               specs[i + 1], results[i + 1].strategy, hw,
+                               producer_extra_held=held_in):
+                choice = ("full", 0)
+            else:
+                rows = row_window_rows(
+                    specs[i], results[i].strategy,
+                    specs[i + 1], results[i + 1].strategy, hw,
+                    producer_extra_held=held_in)
+                if rows:
+                    choice = ("window", rows)
+        reuse_after.append(choice)
 
     layers: list[LayerPlan] = []
     total = gross_total = 0.0
     for i, (spec, pp, res) in enumerate(zip(specs, ps, results)):
         strat = res.strategy
         gross = strat.full_duration(hw)
-        reuse_in = i > 0 and reuse_after[i - 1]
-        reuse_out = i < len(specs) - 1 and reuse_after[i]
-        in_saved = (spec.all_pixels_mask.bit_count() * hw.t_l
-                    if reuse_in else 0.0)
+        mode_in = reuse_after[i - 1] if i > 0 else None
+        mode_out = reuse_after[i] if i < len(specs) - 1 else None
+        reuse_in = mode_in is not None and mode_in[0] == "full"
+        window_rows = mode_in[1] if mode_in and mode_in[0] == "window" else 0
+        # savings never exceed the strategy's measured first-load DRAM
+        # traffic: full residency saves exactly that; a window saves its
+        # rows' needed pixels, clamped for strategies that load fewer.
+        if reuse_in:
+            in_saved = strat.first_load_duration(hw)
+        elif window_rows:
+            in_saved = min(_window_load_saved(spec, window_rows, hw),
+                           strat.first_load_duration(hw))
+        else:
+            in_saved = 0.0
+        reuse_out = mode_out is not None and mode_out[0] == "full"
         wb_saved = strat.write_back_duration(hw) if reuse_out else 0.0
         lp = LayerPlan(index=i, spec=spec, p=pp, result=res,
                        reuse_input=reuse_in, reuse_output=reuse_out,
+                       window_rows=window_rows,
                        gross_duration=gross,
                        input_load_saved=in_saved,
                        write_back_saved=wb_saved)

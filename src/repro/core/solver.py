@@ -16,6 +16,7 @@ The search space is restricted to K = K_min groups (Sec 7.1).
 """
 from __future__ import annotations
 
+import atexit
 import concurrent.futures
 import dataclasses
 import functools
@@ -28,6 +29,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import ilp as ilp_mod
+from repro.core import strategies_s2 as s2_mod
 from repro.core.conv_spec import ConvSpec
 from repro.core.cost_model import HardwareModel
 from repro.core.strategies import (
@@ -37,14 +39,15 @@ from repro.core.strategies import (
 
 @dataclasses.dataclass
 class SolveResult:
-    strategy: GroupedStrategy
-    objective: float            # eq. 15 value under ``hw``
+    strategy: GroupedStrategy | s2_mod.S2Strategy
+    objective: float            # eq. 15 (S1) / full-load objective (S2)
     lower_bound: float
     seed_objective: float       # best heuristic (the MIP start)
-    milp_status: str            # "optimal" | "feasible" | "skipped" | "infeasible"
+    milp_status: str            # "optimal" | "feasible" | "skipped" | "infeasible" | "s2_fallback"
     milp_objective: float | None
     polish_objective: float
     reload_ok: bool             # satisfies nb_data_reload
+    mode: str = "s1"            # "s1" | "s2" (kernel-group swapping)
 
     @property
     def gap(self) -> float:
@@ -248,6 +251,18 @@ def _polish_task(args) -> GroupedStrategy:
 _POOLS: dict[tuple[str, int], concurrent.futures.ProcessPoolExecutor] = {}
 
 
+def shutdown_pools() -> None:
+    """Shut down the long-lived polish pools.  Registered with ``atexit``
+    (so pytest / benchmark runs exit promptly instead of joining idle
+    workers) and exposed as a test hook."""
+    for pool in _POOLS.values():
+        pool.shutdown(wait=False, cancel_futures=True)
+    _POOLS.clear()
+
+
+atexit.register(shutdown_pools)
+
+
 def _polish_pool(max_workers: int) -> concurrent.futures.ProcessPoolExecutor:
     """Long-lived process pool, one per (start-method, size).
 
@@ -328,19 +343,38 @@ def solve(spec: ConvSpec, p: int, hw: HardwareModel,
           rng_seed: int = 0,
           polish_restarts: int = 1,
           polish_workers: int | None = None) -> SolveResult:
-    """Find the best S1 strategy for ``spec`` on ``hw`` with group size p."""
+    """Find the best S1 strategy for ``spec`` on ``hw`` with group size p.
+
+    ``size_mem`` defaults to ``hw.size_mem`` (historically it was only
+    forwarded to the MILP when passed explicitly, so heuristic/polished
+    incumbents could silently exceed the budget): candidates whose peak
+    footprint exceeds the budget are rejected, and ValueError is raised
+    when no seed fits at all — shrink ``p`` (``s1_max_feasible_p``) or
+    fall back to S2 (``solve_cached`` does both automatically).
+    """
+    if size_mem is None:
+        size_mem = hw.size_mem
+
+    def fits(s: GroupedStrategy) -> bool:
+        return size_mem is None or s.peak_footprint_elements() <= size_mem
+
     k = k_min(spec, p)
     seeds = [row_by_row(spec, p), zigzag(spec, p),
              tiled(spec, p), hilbert(spec, p)]
     mip_start = min(seeds[:2], key=lambda s: s.objective(hw))  # paper's seed
-    incumbent = min(seeds, key=lambda s: s.objective(hw))
+    feasible_seeds = [s for s in seeds if fits(s)]
+    if not feasible_seeds:
+        raise ValueError(
+            f"no S1 strategy with group size {p} fits size_mem={size_mem}")
+    incumbent = min(feasible_seeds, key=lambda s: s.objective(hw))
 
     polished = polish_multi(incumbent, p, hw, nb_data_reload,
                             iters=polish_iters, restarts=polish_restarts,
                             rng_seed=rng_seed, workers=polish_workers)
     if polished.objective(hw) < incumbent.objective(hw) and \
             polished.max_reloads() <= max(nb_data_reload,
-                                          incumbent.max_reloads()):
+                                          incumbent.max_reloads()) and \
+            fits(polished):
         incumbent = polished
 
     milp_status, milp_obj = "skipped", None
@@ -352,7 +386,7 @@ def solve(spec: ConvSpec, p: int, hw: HardwareModel,
             strat, milp_status, raw = solve_milp(model, time_limit)
             if strat is not None:
                 milp_obj = strat.objective(hw)
-                if milp_obj < incumbent.objective(hw):
+                if milp_obj < incumbent.objective(hw) and fits(strat):
                     incumbent = strat
         else:
             milp_status = "skipped_too_large"
@@ -369,6 +403,50 @@ def solve(spec: ConvSpec, p: int, hw: HardwareModel,
 
 
 # --------------------------------------------------------------------- #
+# Memory-feasible solving: S1 with group shrinking, S2 kernel-group
+# swapping as the fallback when no S1 group size fits the budget.
+# --------------------------------------------------------------------- #
+
+def s1_max_feasible_p(spec: ConvSpec, p: int, hw: HardwareModel) -> int | None:
+    """Largest group size ``p' <= p`` whose contiguous (zigzag) S1 strategy
+    fits ``hw.size_mem``, or None when S1 is infeasible outright — the
+    kernel set Λ plus one patch exceeds the budget, or the PE cannot take
+    one full patch row (S1 computes all C_out channels per step)."""
+    try:
+        hw.nb_patches_max_s1(spec.nb_op_value, spec.c_out)
+    except ValueError:
+        return None
+    if hw.size_mem is None:
+        return p
+    for cand in range(p, 0, -1):
+        if zigzag(spec, cand).peak_footprint_elements() <= hw.size_mem:
+            return cand
+    return None
+
+
+@functools.lru_cache(maxsize=256)
+def best_s2_cached(spec: ConvSpec, hw: HardwareModel) -> s2_mod.S2Result:
+    """LRU-cached ``best_s2`` — the planner and the greedy baseline share
+    one S2 search per (spec, hw).  Raises ValueError when even S2 cannot
+    fit ``hw.size_mem``."""
+    return s2_mod.best_s2(spec, hw)
+
+
+def _s2_fallback_result(spec: ConvSpec, hw: HardwareModel) -> SolveResult:
+    res = best_s2_cached(spec, hw)
+    return SolveResult(
+        strategy=res.strategy,
+        objective=res.objective,
+        lower_bound=s2_mod.s2_lower_bound(spec, hw),
+        seed_objective=res.objective,   # best_s2 has no polish stage
+        milp_status="s2_fallback",
+        milp_objective=None,
+        polish_objective=res.objective,
+        reload_ok=True,
+        mode="s2")
+
+
+# --------------------------------------------------------------------- #
 # Solve cache — repeated layers (ResNet stages) are solved once.
 # All key components are frozen dataclasses, hence hashable.
 # --------------------------------------------------------------------- #
@@ -381,10 +459,34 @@ def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
                  use_milp: bool = True,
                  rng_seed: int = 0,
                  polish_restarts: int = 1) -> SolveResult:
-    """LRU-cached ``solve`` keyed on (spec, p, hw, nb_data_reload, ...).
+    """LRU-cached memory-feasible solve keyed on (spec, p, hw, ...) — the
+    S1/S2 choice is part of the cached entry, so repeated layers resolve
+    their fallback once.  ``hw.size_mem`` participates in the key via the
+    frozen ``HardwareModel``.
+
+    Selection rule: the largest S1 group size that fits the budget is
+    solved; when the budget forced the group below the PE-optimal ``p``
+    (or no S1 fits at all), the S2 kernel-group-swapping alternative is
+    priced with the same full Def-3 accounting and the cheaper wins.
     ``solve_cached.cache_info()`` exposes the hit counters the network
     planner reports."""
-    return solve(spec, p, hw, nb_data_reload=nb_data_reload,
-                 time_limit=time_limit, polish_iters=polish_iters,
-                 use_milp=use_milp, rng_seed=rng_seed,
-                 polish_restarts=polish_restarts)
+    p_fit = s1_max_feasible_p(spec, p, hw)
+    if p_fit is None:
+        return _s2_fallback_result(spec, hw)
+    res = solve(spec, p_fit, hw, nb_data_reload=nb_data_reload,
+                time_limit=time_limit, polish_iters=polish_iters,
+                use_milp=use_milp, rng_seed=rng_seed,
+                polish_restarts=polish_restarts)
+    if hw.size_mem is not None:
+        if res.strategy.peak_footprint_elements() > hw.size_mem:
+            return _s2_fallback_result(spec, hw)
+        if p_fit < p:
+            # budget-constrained S1: price the S2 alternative too
+            try:
+                s2_res = _s2_fallback_result(spec, hw)
+            except ValueError:
+                return res
+            if s2_res.strategy.full_duration(hw) < \
+                    res.strategy.full_duration(hw):
+                return s2_res
+    return res

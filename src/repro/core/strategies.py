@@ -128,6 +128,22 @@ class GroupedStrategy:
                 + self.peak_input_footprint() * self.spec.c_in
                 + 2 * self.max_group_size() * self.spec.c_out)
 
+    def peak_working_set_elements(self) -> int:
+        """Peak resident elements excluding output buffers — what must fit
+        next to a held activation when the outputs accumulate into that
+        held map instead of draining through write-backs (the producer-side
+        term of the network planner's reuse fit condition)."""
+        return (self.spec.kernel_elements
+                + self.peak_input_footprint() * self.spec.c_in)
+
+    def first_load_duration(self, hw: HardwareModel) -> float:
+        """t_l traffic of first-time input-pixel loads — the most an
+        upstream on-chip activation can ever save this strategy."""
+        covered = 0
+        for g in self.groups:
+            covered |= self.spec.group_mask(g)
+        return covered.bit_count() * hw.t_l
+
     # -- full Def-3 accounting (network-level planning) ----------------- #
     def kernel_load_duration(self, hw: HardwareModel) -> float:
         """t_l cost of loading Λ once (K_sub of step 1, element units)."""

@@ -134,6 +134,43 @@ class S2Strategy:
             prev_out_elems = out
         return peak
 
+    # -- strategy protocol (shared with strategies.GroupedStrategy) ------ #
+    def max_group_size(self) -> int:
+        return max(len(g) for g, _ in self.schedule)
+
+    def peak_footprint_elements(self) -> int:
+        """Protocol alias: peak resident elements during any step."""
+        return self.peak_memory_elements()
+
+    def peak_working_set_elements(self) -> int:
+        """Peak resident elements excluding output buffers: the largest
+        (input pixels + swapped kernel group) of any step — what must fit
+        next to a held activation on the producer side."""
+        spec = self.spec
+        kelem = spec.c_in * spec.h_k * spec.w_k
+        return max(spec.group_mask(g).bit_count() * spec.c_in
+                   + len(self.kernel_groups[kg]) * kelem
+                   for g, kg in self.schedule)
+
+    def write_back_duration(self, hw: HardwareModel) -> float:
+        """t_w cost of writing every (patch, kernel) output cell back —
+        S2 drains outputs at cell granularity (cf. sim.s2.run_s2)."""
+        return self.spec.num_patches * self.spec.c_out * hw.t_w
+
+    def full_duration(self, hw: HardwareModel) -> float:
+        """Def-3 duration of the materialised schedule.  The S2 objective
+        already includes kernel (re)loads, so only write-backs are added;
+        matches ``sim.s2.run_s2`` exactly (tests/test_s2_sim.py)."""
+        return self.objective(hw) + self.write_back_duration(hw)
+
+    def first_load_duration(self, hw: HardwareModel) -> float:
+        """t_l traffic of first-time input-pixel loads (reloads beyond the
+        first still hit DRAM even under inter-layer reuse)."""
+        covered = 0
+        for g, _ in self.schedule:
+            covered |= self.spec.group_mask(g)
+        return covered.bit_count() * hw.t_l
+
 
 # --------------------------------------------------------------------- #
 # Builders
@@ -168,6 +205,17 @@ def nb_patches_max_s2(spec: ConvSpec, hw: HardwareModel,
     if cap < 1:
         raise ValueError("PE cannot fit one patch x kernel-group step")
     return cap
+
+
+def s2_lower_bound(spec: ConvSpec, hw: HardwareModel) -> float:
+    """Analytic lower bound on the S2 objective: every needed pixel and
+    every kernel element loaded at least once, and at least enough steps to
+    push all (patch, kernel) cells through the PE."""
+    cells = spec.num_patches * spec.n_kernels
+    cells_per_step = max(1, hw.nbop_pe // spec.nb_op_value)
+    min_steps = -(-cells // cells_per_step)
+    return (hw.t_l * (spec.all_pixels_mask.bit_count() + spec.kernel_elements)
+            + min_steps * hw.t_acc)
 
 
 @dataclasses.dataclass

@@ -1,12 +1,13 @@
 """Whole-network functional simulation (Sec 6 extended to layer sequences).
 
-Executes every layer of a ``NetworkPlan`` through the Sec-6 ``System``
-simulator — real values convolved, outputs checked against the reference
-convolution — and reconciles the measured Def-3 durations with the plan's
-accounting.  Layers are materialised independently (the pooling/stride
-adapters between network layers are outside the paper's formalism), so the
-simulator validates the *per-layer* schedules exactly and the inter-layer
-reuse terms analytically:
+Executes every layer of a ``NetworkPlan`` through the matching functional
+simulator — the Sec-6 ``System`` for S1 strategies, ``sim.s2.run_s2`` for
+S2 kernel-group-swapping strategies — with real values convolved, outputs
+checked against the reference convolution, and the measured Def-3
+durations reconciled with the plan's accounting.  Layers are materialised
+independently (the pooling/stride adapters between network layers are
+outside the paper's formalism), so the simulator validates the *per-layer*
+schedules exactly and the inter-layer reuse terms analytically:
 
     sum(sim layer durations) == plan.gross_duration      (exact)
     plan.total_duration = gross - sum(reuse savings)     (by construction)
@@ -14,16 +15,21 @@ reuse terms analytically:
 from __future__ import annotations
 
 import dataclasses
+from typing import Union
 
 from repro.core.network_planner import NetworkPlan
+from repro.core.strategies_s2 import S2Strategy
 from repro.sim.layer import ConvLayer
+from repro.sim.s2 import S2Report, run_s2
 from repro.sim.system import SimReport, System
+
+LayerReport = Union[SimReport, S2Report]
 
 
 @dataclasses.dataclass
 class NetworkSimReport:
     plan: NetworkPlan
-    layer_reports: list[SimReport]
+    layer_reports: list[LayerReport]
     sim_gross_duration: float     # measured, no inter-layer reuse
     modeled_total_duration: float  # plan's prediction, with reuse
     elements_read: int
@@ -41,6 +47,16 @@ class NetworkSimReport:
             abs(r.total_duration - lp.gross_duration) < 1e-9
             for r, lp in zip(self.layer_reports, self.plan.layers))
 
+    @property
+    def peak_within_budget(self) -> bool:
+        """Every layer's measured peak must respect ``hw.size_mem``."""
+        cap = self.plan.hw.size_mem
+        if cap is None:
+            return True
+        return all(
+            (r.peak_memory if isinstance(r, S2Report) else r.peak_footprint)
+            <= cap for r in self.layer_reports)
+
     def summary(self) -> str:
         return (f"network sim: {self.plan.name} "
                 f"layers={len(self.layer_reports)} correct={self.correct} "
@@ -53,11 +69,16 @@ class NetworkSimReport:
 def simulate_network(plan: NetworkPlan, seed: int = 0,
                      check: bool = True) -> NetworkSimReport:
     """Run every planned layer strategy functionally and cross-check the
-    plan's duration model against the simulator."""
-    reports: list[SimReport] = []
+    plan's duration model against the simulator.  S2 layers (the tight
+    memory fallback) run through the kernel-swapping executor."""
+    reports: list[LayerReport] = []
     for lp in plan.layers:
         layer = ConvLayer.random(lp.spec, seed=seed + lp.index)
-        reports.append(System(layer, plan.hw).run(lp.strategy, check=check))
+        if isinstance(lp.strategy, S2Strategy):
+            reports.append(run_s2(layer, plan.hw, lp.strategy))
+        else:
+            reports.append(System(layer, plan.hw).run(lp.strategy,
+                                                      check=check))
     return NetworkSimReport(
         plan=plan,
         layer_reports=reports,

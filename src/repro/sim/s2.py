@@ -26,6 +26,7 @@ class S2Report:
     elements_read: int
     elements_written: int
     kernel_loads: int         # total kernel fetch events (reload pressure)
+    total_macs: int = 0
 
 
 def run_s2(layer: ConvLayer, hw: HardwareModel,
@@ -39,7 +40,7 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
     pixels: dict[int, np.ndarray] = {}
     kernels: dict[int, np.ndarray] = {}
     pending: dict[tuple[int, int], float] = {}   # (pid, kid) -> value
-    reads = writes = kernel_loads = 0
+    reads = writes = kernel_loads = total_macs = 0
     duration = 0.0
     peak = 0
 
@@ -86,6 +87,7 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
         macs = len(g) * spec.nb_op_value * len(kids)
         if macs > hw.nbop_pe:
             raise RuntimeError(f"PE overrun: {macs} > {hw.nbop_pe}")
+        total_macs += macs
         for pid in g:
             h0, w0, h1, w1 = spec.patch_bbox(pid)
             patch = np.stack([pixels[spec.pixel_id(h, w)]
@@ -112,4 +114,4 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
     return S2Report(output=out, correct=ok, max_abs_err=err,
                     total_duration=duration, peak_memory=peak,
                     elements_read=reads, elements_written=writes,
-                    kernel_loads=kernel_loads)
+                    kernel_loads=kernel_loads, total_macs=total_macs)

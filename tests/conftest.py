@@ -1,0 +1,61 @@
+"""Shared test configuration.
+
+Tier-1 speed: paper-sized polish budgets (30k iters x multi-restart)
+dominate solver-test wall-clock without changing any assertion — every
+solver assertion is an inequality against a seed or bound that holds for
+any iteration count.  An autouse fixture therefore caps the polish budget
+reaching ``solver.solve`` / ``solver.polish``; set ``REPRO_FULL_POLISH=1``
+to run the paper-sized budgets.  Profile the suite with
+``pytest -q --durations=10``.
+"""
+import os
+
+import pytest
+
+from repro.core import solver
+
+_MAX_ITERS = 1_500
+_MAX_RESTARTS = 2
+
+
+@pytest.fixture(autouse=True)
+def _fast_polish(monkeypatch):
+    """Cap polish iterations/restarts for every solver entry point (the
+    LRU-cached paths call the module globals, so they are capped too)."""
+    if os.environ.get("REPRO_FULL_POLISH"):
+        yield
+        return
+
+    orig_solve = solver.solve
+
+    def capped_solve(spec, p, hw, nb_data_reload=2, size_mem=None,
+                     time_limit=30.0, polish_iters=30_000,
+                     milp_var_limit=60_000, use_milp=True, rng_seed=0,
+                     polish_restarts=1, polish_workers=None):
+        return orig_solve(
+            spec, p, hw, nb_data_reload=nb_data_reload, size_mem=size_mem,
+            time_limit=time_limit,
+            polish_iters=min(polish_iters, _MAX_ITERS),
+            milp_var_limit=milp_var_limit, use_milp=use_milp,
+            rng_seed=rng_seed,
+            polish_restarts=min(polish_restarts, _MAX_RESTARTS),
+            polish_workers=polish_workers)
+
+    orig_polish = solver.polish
+
+    def capped_polish(seed, p, hw, nb_data_reload=2, iters=30_000,
+                      rng_seed=0):
+        return orig_polish(seed, p, hw, nb_data_reload,
+                           iters=min(iters, _MAX_ITERS), rng_seed=rng_seed)
+
+    monkeypatch.setattr(solver, "solve", capped_solve)
+    monkeypatch.setattr(solver, "polish", capped_polish)
+    yield
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _shutdown_polish_pools():
+    """Join the long-lived polish process pools at session end so pytest
+    exits promptly (also registered via atexit in repro.core.solver)."""
+    yield
+    solver.shutdown_pools()

@@ -1,15 +1,18 @@
 """Network-level planner: determinism, solve-cache reuse, dominance over
-the per-layer-greedy baseline, inter-layer reuse gating, and exact
-agreement of the duration model with the Sec-6 simulator."""
+the per-layer-greedy baseline, inter-layer reuse gating, exact agreement
+of the duration model with the Sec-6 simulator, and memory feasibility —
+the S2 kernel-swapping fallback plus row-window cascading (ISSUE 2)."""
 import pytest
 
-from repro.configs import lenet5, resnet8
+from repro.configs import lenet5, resnet8, tight
 from repro.core import solver
 from repro.core.conv_spec import ConvSpec
 from repro.core.cost_model import HardwareModel
-from repro.core.network_planner import (activation_fits,
+from repro.core.network_planner import (InfeasibleNetworkError,
+                                        activation_fits,
                                         greedy_network_duration,
-                                        plan_network, resolve_group_size)
+                                        plan_network, resolve_group_size,
+                                        row_window_rows)
 from repro.core.strategies import best_heuristic
 from repro.sim import simulate_network
 
@@ -106,6 +109,130 @@ def test_plans_paper_networks():
         assert plan.report()
 
 
+def test_tight_budget_falls_back_to_s2_and_stays_feasible():
+    """Regression (ISSUE 2): a budget smaller than the largest layer's
+    kernel set used to produce an infeasible S1 plan silently; now the
+    planner must emit a feasible plan using S2 for that layer."""
+    net = tight.LAYERS_SMALL
+    budget = max(s.kernel_elements for s in net) - 1
+    hw = HardwareModel(nbop_pe=10 ** 9, size_mem=budget)
+    plan = plan_network(net, hw, **FAST)
+    assert plan.n_s2_layers >= 1
+    assert plan.peak_footprint <= budget
+    for lp in plan.layers:
+        assert lp.strategy.peak_footprint_elements() <= budget
+        assert lp.duration >= 0
+    # plan must not lose to the feasible per-layer-greedy baseline
+    assert plan.total_duration <= plan.baseline_duration
+    # exact functional + accounting + memory validation through the sims
+    rep = simulate_network(plan)
+    assert rep.correct
+    assert rep.accounting_exact
+    assert rep.peak_within_budget
+
+
+def test_infeasible_budget_raises_not_silent():
+    """plan_network / greedy_network_duration raise instead of returning
+    an infeasible schedule when nothing fits."""
+    hw = HardwareModel(nbop_pe=10 ** 9, size_mem=4)
+    with pytest.raises(InfeasibleNetworkError):
+        plan_network(SMALL_NET, hw, **FAST)
+    with pytest.raises(InfeasibleNetworkError):
+        greedy_network_duration(SMALL_NET, hw)
+
+
+def test_savings_clamped_and_durations_nonnegative():
+    """input_load_saved never exceeds the strategy's measured first-load
+    traffic and no layer's net duration goes negative, across budgets."""
+    for size_mem in (None, 600, 1200, 2400, 4800):
+        hw = HardwareModel(nbop_pe=10 ** 9, size_mem=size_mem)
+        try:
+            plan = plan_network(SMALL_NET, hw, **FAST)
+        except InfeasibleNetworkError:
+            continue
+        for lp in plan.layers:
+            assert lp.duration >= 0
+            assert lp.input_load_saved <= \
+                lp.strategy.first_load_duration(hw) + 1e-9
+            assert lp.write_back_saved <= \
+                lp.strategy.write_back_duration(hw) + 1e-9
+
+
+def test_row_window_cascade_partial_savings():
+    """When the full activation does not fit, a halo-extended row window
+    is held instead: partial first-load savings, no write-back savings."""
+    hw = HardwareModel(nbop_pe=10 ** 9, size_mem=2400)
+    plan = plan_network(lenet5.LAYERS, hw, **FAST)
+    windowed = [lp for lp in plan.layers if lp.window_rows]
+    assert windowed, "expected a row-window cascade at this budget"
+    for lp in windowed:
+        assert not lp.reuse_input          # partial, not full residency
+        assert lp.window_rows >= lp.spec.h_k   # halo-extended minimum
+        assert 0 < lp.input_load_saved <= \
+            lp.strategy.first_load_duration(hw)
+        # the producer of a windowed consumer still writes back
+        assert not plan.layers[lp.index - 1].reuse_output
+    rep = simulate_network(plan)
+    assert rep.correct and rep.accounting_exact and rep.peak_within_budget
+
+
+def _resident_during(plan, i):
+    """Everything resident while layer i executes: its held input map
+    (full or window) plus — when it also holds its output — the
+    accumulating output map next to its working set, else its full peak
+    footprint (write-back buffers included)."""
+    lp = plan.layers[i]
+    held_in = 0
+    if i > 0:
+        prev = plan.layers[i - 1].spec
+        if lp.reuse_input:
+            held_in = max(prev.num_patches * prev.c_out,
+                          lp.spec.num_pixels * lp.spec.c_in)
+        elif lp.window_rows:
+            held_in = lp.window_rows * lp.spec.w_in * lp.spec.c_in
+    if lp.reuse_output:
+        nxt = plan.layers[i + 1].spec
+        held_out = max(lp.spec.num_patches * lp.spec.c_out,
+                       nxt.num_pixels * nxt.c_in)
+        return held_in + held_out + lp.strategy.peak_working_set_elements()
+    return held_in + lp.strategy.peak_footprint_elements()
+
+
+def test_combined_residency_within_budget():
+    """A middle layer holding both its input map and its accumulating
+    output map must still fit the budget — pairwise-only reuse checks
+    used to overcommit memory on chains of three or more layers."""
+    for specs in (SMALL_NET, tight.LAYERS):
+        big = max(s.kernel_elements for s in specs)
+        for frac in (0.5, 1.0, 1.5, 2.0, 3.0, 6.0):
+            hw = HardwareModel(nbop_pe=10 ** 9, size_mem=int(big * frac))
+            try:
+                plan = plan_network(specs, hw, **FAST)
+            except InfeasibleNetworkError:
+                continue
+            for i in range(plan.n_layers):
+                assert _resident_during(plan, i) <= hw.size_mem, \
+                    (hw.size_mem, i)
+
+
+def test_row_window_rows_fit_condition():
+    """Window sizing: bounded by the spare budget next to both layers'
+    working sets, at least h_k rows, at most the consumer's input."""
+    spec = SMALL_NET[1]
+    strat = best_heuristic(spec, 4, HW)
+    # unconstrained: full residency path, no window needed
+    assert row_window_rows(spec, strat, spec, strat, HW) == 0
+    # generous budget: full input window
+    roomy = HardwareModel(nbop_pe=10 ** 9, size_mem=10 ** 6)
+    assert row_window_rows(spec, strat, spec, strat, roomy) == spec.h_in
+    # just enough spare for fewer than h_k rows: no window
+    base = strat.peak_footprint_elements()
+    barely = HardwareModel(
+        nbop_pe=10 ** 9,
+        size_mem=base + (spec.h_k - 1) * spec.w_in * spec.c_in)
+    assert row_window_rows(spec, strat, spec, strat, barely) == 0
+
+
 def test_resolve_group_size_respects_pe_and_cap():
     spec = ConvSpec(1, 10, 10, 2, 3, 3)
     small_pe = HardwareModel(nbop_pe=spec.nb_op_value * spec.c_out * 3)
@@ -114,3 +241,6 @@ def test_resolve_group_size_respects_pe_and_cap():
     assert resolve_group_size(spec, big_pe, max_group=8) == 8
     assert resolve_group_size(spec, big_pe, max_group=None) == \
         spec.num_patches
+    # PE below one full S1 patch row: group size 1 (solver goes S2)
+    tiny_pe = HardwareModel(nbop_pe=spec.nb_op_value * spec.c_out - 1)
+    assert resolve_group_size(spec, tiny_pe) == 1
