@@ -9,15 +9,27 @@ solve-cache hit rate, and — with ``--sweep-mem`` — a tight-memory sweep
 over a (size_mem x network) grid showing the S1→S2 crossover: budgets
 below the largest layer's kernel set force the kernel-group-swapping
 fallback, and the plan must stay feasible and keep beating greedy.
+``--sweep-chips`` adds the multi-chip scaling curve: each network is
+planned on 1/2/4/8-chip ICI rings (``core.multichip``) at the tight
+budget where sharding matters (half the largest kernel set), recording
+the chosen mode string, ICI fraction, and speedup over the 1-chip plan.
+
+Full-scope runs (no ``--fast``, no ``--networks`` filter) also refresh
+``BENCH_network_plan.json`` at the repo root — a stable, compact summary
+(per-network duration, gain_vs_baseline, wall-clock, chip-scaling points)
+that accumulates the perf trajectory across PRs; smoke/scoped runs leave
+it untouched so degraded numbers never clobber the trajectory.
 
     PYTHONPATH=src python -m benchmarks.network_plan \
         [--networks lenet5 resnet8 tight4] [--size-mem N] \
         [--sweep-mem auto | --sweep-mem 2000 8000 ...] \
+        [--sweep-chips auto | --sweep-chips 1 2 4 ...] \
         [--restarts 4] [--iters 6000] [--fast] \
-        [--out benchmarks/results/network_plan.json]
+        [--out benchmarks/results/network_plan.json] \
+        [--bench-out BENCH_network_plan.json]
 
 ``--fast`` is the CI smoke target: tiny polish budgets, the small
-networks, and an automatic sweep (seconds, not minutes).
+networks, and automatic sweeps (seconds, not minutes).
 """
 from __future__ import annotations
 
@@ -27,10 +39,12 @@ import os
 import sys
 import time
 
+from repro.configs.clusters import make_cluster
 from repro.configs.networks import NETWORKS
 from repro.configs.tight import budget_points
 from repro.core import solver
 from repro.core.cost_model import HardwareModel
+from repro.core.multichip import plan_multichip_network
 from repro.core.network_planner import InfeasibleNetworkError, plan_network
 
 
@@ -109,6 +123,76 @@ def sweep_tight_memory(name: str, budgets: list[int], *, nbop_pe: int,
     return {"network": name, "points": rows}
 
 
+def sweep_chip_counts(name: str, chip_counts: list[int], *, nbop_pe: int,
+                      iters: int, restarts: int, rng_seed: int) -> dict:
+    """Plan ``name`` on ICI rings of each chip count at the tight budget
+    (half the largest kernel set Λ — the regime where sharding either
+    restores S1 feasibility or loses to resharding ICI traffic)."""
+    specs = NETWORKS[name]
+    size_mem = max(s.kernel_elements for s in specs) // 2
+    rows = []
+    single = None
+    for n_chips in chip_counts:
+        cluster = make_cluster(n_chips, nbop_pe=nbop_pe, size_mem=size_mem)
+        t0 = time.perf_counter()
+        try:
+            plan = plan_multichip_network(
+                specs, cluster, name=name, polish_iters=iters,
+                polish_restarts=restarts, rng_seed=rng_seed,
+                include_single_chip_baseline=False)
+        except InfeasibleNetworkError as e:
+            rows.append({"n_chips": n_chips, "feasible": False,
+                         "error": str(e)})
+            continue
+        wall = time.perf_counter() - t0
+        if n_chips == 1:
+            single = plan.total_duration
+        rows.append({
+            "n_chips": n_chips,
+            "feasible": True,
+            "total_duration": plan.total_duration,
+            "modes": plan.mode_string,
+            "n_sharded_layers": plan.n_sharded_layers,
+            "ici_fraction": round(plan.ici_fraction, 4),
+            "peak_footprint": plan.peak_footprint,
+            "planning_wall_s": round(wall, 4),
+            "speedup_vs_1chip": (round(single / plan.total_duration, 4)
+                                 if single else None),
+        })
+    return {"network": name, "size_mem": size_mem,
+            "t_ici": make_cluster(1, nbop_pe=nbop_pe).t_ici,
+            "points": rows}
+
+
+def write_bench_summary(path: str, rows: list[dict],
+                        chip_sweeps: list[dict]) -> None:
+    """Stable repo-root summary: the perf-trajectory file other PRs diff."""
+    summary = {
+        "benchmark": "network_plan",
+        "networks": [
+            {"network": r["network"],
+             "feasible": r["feasible"],
+             **({"total_duration": r["total_duration"],
+                 "gain_vs_baseline": r["gain_vs_baseline"],
+                 "planning_wall_s": r["planning_wall_s"]}
+                if r["feasible"] else {})}
+            for r in sorted(rows, key=lambda r: r["network"])],
+        "chip_sweep": [
+            {"network": sw["network"], "size_mem": sw["size_mem"],
+             "points": [
+                 {"n_chips": p["n_chips"], "feasible": p["feasible"],
+                  **({"total_duration": p["total_duration"],
+                      "modes": p["modes"],
+                      "speedup_vs_1chip": p["speedup_vs_1chip"]}
+                     if p["feasible"] else {})}
+                 for p in sw["points"]]}
+            for sw in sorted(chip_sweeps, key=lambda s: s["network"])],
+    }
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--networks", nargs="+", default=None,
@@ -120,21 +204,33 @@ def main(argv=None) -> int:
                     help="budgets for the tight-memory sweep: explicit "
                          "element counts, or 'auto' for fractions of each "
                          "network's largest kernel set")
+    ap.add_argument("--sweep-chips", nargs="+", default=None,
+                    help="chip counts for the multi-chip scaling sweep: "
+                         "explicit counts, or 'auto' for 1 2 4 8")
     ap.add_argument("--nbop-pe", type=int, default=10 ** 9)
     ap.add_argument("--iters", type=int, default=6000)
     ap.add_argument("--restarts", type=int, default=4)
     ap.add_argument("--rng-seed", type=int, default=0)
     ap.add_argument("--fast", action="store_true",
                     help="smoke preset: small networks, tiny polish budget, "
-                         "auto sweep")
+                         "auto sweeps")
     ap.add_argument("--out", default="benchmarks/results/network_plan.json")
+    ap.add_argument("--bench-out", default="BENCH_network_plan.json",
+                    help="stable perf-trajectory summary at the repo root "
+                         "(written only by full-scope runs: no --fast, no "
+                         "--networks filter — smoke numbers must not "
+                         "clobber the trajectory)")
     args = ap.parse_args(argv)
 
+    trajectory_grade = not args.fast and args.networks is None
     if args.fast:
-        args.networks = args.networks or ["lenet5", "tight2"]
+        args.networks = args.networks or ["lenet5", "tight2", "tight4"]
         args.iters = min(args.iters, 300)
         args.restarts = min(args.restarts, 1)
         args.sweep_mem = args.sweep_mem or ["auto"]
+        args.sweep_chips = args.sweep_chips or ["1", "2", "4"]
+    if args.sweep_chips == ["auto"]:
+        args.sweep_chips = ["1", "2", "4", "8"]
     networks = args.networks or sorted(NETWORKS)
 
     hw = HardwareModel(nbop_pe=args.nbop_pe, size_mem=args.size_mem)
@@ -153,16 +249,27 @@ def main(argv=None) -> int:
                 n, budgets, nbop_pe=args.nbop_pe, iters=args.iters,
                 restarts=args.restarts, rng_seed=args.rng_seed))
 
+    chip_sweeps = []
+    if args.sweep_chips:
+        counts = sorted({int(c) for c in args.sweep_chips})
+        for n in networks:
+            chip_sweeps.append(sweep_chip_counts(
+                n, counts, nbop_pe=args.nbop_pe, iters=args.iters,
+                restarts=args.restarts, rng_seed=args.rng_seed))
+
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
               "networks": rows,
-              "tight_memory_sweep": sweeps}
+              "tight_memory_sweep": sweeps,
+              "chip_sweep": chip_sweeps}
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
+    if trajectory_grade:
+        write_bench_summary(args.bench_out, rows, chip_sweeps)
 
     for r in rows:
         if not r["feasible"]:
@@ -187,13 +294,29 @@ def main(argv=None) -> int:
                   f"plan {pt['total_duration']:g} vs greedy "
                   f"{pt['greedy_baseline_duration']:g} "
                   f"(gain {pt['gain_vs_baseline']:.1%})")
-    print("saved ->", args.out)
+    for sw in chip_sweeps:
+        for pt in sw["points"]:
+            if not pt["feasible"]:
+                print(f"[chips] {sw['network']} n={pt['n_chips']}: "
+                      f"infeasible")
+                continue
+            sp = pt["speedup_vs_1chip"]
+            print(f"[chips] {sw['network']} mem={sw['size_mem']} "
+                  f"n={pt['n_chips']}: [{pt['modes']}] "
+                  f"dur {pt['total_duration']:g} "
+                  f"(ici {pt['ici_fraction']:.1%}"
+                  f"{f', {sp}x vs 1 chip' if sp else ''})")
+    print("saved ->", args.out,
+          *(["and", args.bench_out] if trajectory_grade else []))
 
     ok = all(r["feasible"] and r["beats_baseline"] for r in rows)
     # the sweep must stay feasible and beat greedy on >= 1 budget point
     for sw in sweeps:
         feas = [p for p in sw["points"] if p["feasible"]]
         ok = ok and bool(feas) and any(p["beats_baseline"] for p in feas)
+    # the chip sweep must stay feasible at every requested count
+    for sw in chip_sweeps:
+        ok = ok and all(p["feasible"] for p in sw["points"])
     return 0 if ok else 1
 
 

@@ -1,0 +1,96 @@
+"""Demo: plan a conv network on a multi-chip ICI ring, print the cluster
+schedule, validate every shard functionally through the Sec-6 / S2
+simulators — and show the replicate→shard crossover: as the per-chip
+budget shrinks (kernel sets stop fitting) or the chip count grows, layers
+flip from the single-chip replicate path to row/channel sharding, paying
+ICI for halo exchanges, input broadcasts, and resharding.
+
+    PYTHONPATH=src python examples/plan_multichip.py [network] \
+        [--chips 4] [--size-mem N] [--ici-factor 4]
+    PYTHONPATH=src python examples/plan_multichip.py tight4 --crossover
+"""
+import argparse
+
+from repro.configs.clusters import ICI_FACTOR, make_cluster
+from repro.configs.networks import NETWORKS
+from repro.configs.tight import budget_points
+from repro.core.multichip import plan_multichip_network
+from repro.core.network_planner import InfeasibleNetworkError
+from repro.sim import simulate_multichip
+
+FAST = dict(polish_iters=2000, polish_restarts=2)
+
+
+def run_once(name: str, n_chips: int, size_mem: int | None,
+             nbop_pe: int, ici_factor: float) -> None:
+    cluster = make_cluster(n_chips, nbop_pe=nbop_pe, size_mem=size_mem,
+                           ici_factor=ici_factor)
+    plan = plan_multichip_network(NETWORKS[name], cluster, name=name,
+                                  **FAST)
+    print(plan.report())
+    print()
+    rep = simulate_multichip(plan)
+    print(rep.summary())
+    assert rep.correct, "functional check failed"
+    assert rep.accounting_exact, "duration model disagrees with simulator"
+    assert rep.peak_within_budget, "a shard's footprint exceeds size_mem"
+    print("functional + accounting + per-chip memory checks passed")
+
+
+def crossover(name: str, nbop_pe: int, ici_factor: float) -> None:
+    """Budgets shrink top-to-bottom, chips grow left-to-right: watch the
+    mode string flip from all-replicate to row (W) / channel (K) shards
+    exactly where sharding buys back S1 feasibility."""
+    specs = NETWORKS[name]
+    budgets = budget_points(specs, fractions=(4.0, 2.0, 1.0, 0.5, 0.25))
+    print(f"{name}: replicate→shard crossover "
+          f"(largest Λ = {max(s.kernel_elements for s in specs)} elements, "
+          f"t_ici = {ici_factor:g} * t_l)")
+    for size_mem in sorted(budgets, reverse=True):
+        cells = []
+        for n_chips in (1, 2, 4, 8):
+            cluster = make_cluster(n_chips, nbop_pe=nbop_pe,
+                                   size_mem=size_mem,
+                                   ici_factor=ici_factor)
+            try:
+                plan = plan_multichip_network(
+                    specs, cluster, name=name, polish_iters=800,
+                    polish_restarts=1, include_single_chip_baseline=False)
+            except InfeasibleNetworkError:
+                cells.append(f"n{n_chips}: infeasible")
+                continue
+            cells.append(f"n{n_chips}:[{plan.mode_string}] "
+                         f"{plan.total_duration:g}")
+        print(f"  mem={size_mem:>8}:  " + "   ".join(cells))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("network", nargs="?", default="tight4",
+                    choices=sorted(NETWORKS))
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--size-mem", type=int, default=None,
+                    help="per-chip on-chip budget in elements (default: "
+                         "half the largest kernel set — the sharding "
+                         "regime)")
+    ap.add_argument("--nbop-pe", type=int, default=10 ** 9)
+    ap.add_argument("--ici-factor", type=float, default=ICI_FACTOR,
+                    help="t_ici as a multiple of t_l")
+    ap.add_argument("--crossover", action="store_true",
+                    help="sweep (budget x chip count) and show the mode "
+                         "string at each point")
+    args = ap.parse_args()
+
+    if args.crossover:
+        crossover(args.network, args.nbop_pe, args.ici_factor)
+        return
+    size_mem = args.size_mem
+    if size_mem is None:
+        specs = NETWORKS[args.network]
+        size_mem = max(s.kernel_elements for s in specs) // 2
+    run_once(args.network, args.chips, size_mem, args.nbop_pe,
+             args.ici_factor)
+
+
+if __name__ == "__main__":
+    main()

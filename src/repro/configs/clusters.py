@@ -1,0 +1,37 @@
+"""Cluster presets for the multi-chip planner: 1/2/4/8-chip ICI rings.
+
+Abstract-unit clusters (``t_l = t_w = t_acc = 1`` cycle per element, the
+paper's Sec-7 setting) with ``t_ici = ICI_FACTOR * t_l``.  On TPU v5e one
+ICI link moves bytes ~16x slower than HBM (819 GB/s vs 50 GB/s per link,
+see ``TpuChipModel``), but a chip drives 4 ICI ports, so collectives that
+spread traffic across links see an *effective* per-element cost of ~4x an
+HBM load — ``ICI_FACTOR = 4`` models that aggregate; pass
+``ici_factor=16`` for the pessimistic single-link bound (the planner then
+correctly refuses to shard small activations).  ``TPU_V5E_RING*`` are
+rings in the real chip's seconds/bytes units via
+:meth:`TpuChipModel.as_cluster` (per-link pricing).
+"""
+from repro.core.cost_model import TPU_V5E, ClusterModel, HardwareModel
+
+# effective t_ici / t_l across a v5e chip's 4 ICI ports (per-link: ~16)
+ICI_FACTOR = 4.0
+
+
+def make_cluster(n_chips: int, *, nbop_pe: int = 10 ** 9,
+                 size_mem: int | None = None, t_l: float = 1.0,
+                 t_w: float = 1.0, t_acc: float = 1.0,
+                 ici_factor: float = ICI_FACTOR) -> ClusterModel:
+    """An abstract-unit ICI ring of ``n_chips`` identical chips."""
+    chip = HardwareModel(nbop_pe=nbop_pe, size_mem=size_mem,
+                         t_l=t_l, t_w=t_w, t_acc=t_acc)
+    return ClusterModel(chip=chip, n_chips=n_chips, t_ici=t_l * ici_factor)
+
+
+RING1 = make_cluster(1)
+RING2 = make_cluster(2)
+RING4 = make_cluster(4)
+RING8 = make_cluster(8)
+RINGS = {1: RING1, 2: RING2, 4: RING4, 8: RING8}
+
+TPU_V5E_RING4 = TPU_V5E.as_cluster(4)
+TPU_V5E_RING8 = TPU_V5E.as_cluster(8)

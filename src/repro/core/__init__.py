@@ -4,13 +4,14 @@ beyond-paper Tiled/Hilbert and S2 families, the ILP (Sec 5) with its
 HiGHS + polishing solver, and the TPU tile-schedule planner that carries
 the same cost model into the Pallas kernels."""
 from repro.core.conv_spec import ConvSpec
-from repro.core.cost_model import TPU_V5E, HardwareModel, TpuChipModel
+from repro.core.cost_model import (TPU_V5E, ClusterModel, HardwareModel,
+                                   TpuChipModel)
 from repro.core.formalism import MemoryState, Step, StepError, run_steps
 from repro.core.strategies import (GroupedStrategy, best_heuristic, hilbert,
                                    row_by_row, s1_baseline, tiled, zigzag)
 
 __all__ = [
-    "ConvSpec", "HardwareModel", "TpuChipModel", "TPU_V5E",
+    "ConvSpec", "HardwareModel", "TpuChipModel", "TPU_V5E", "ClusterModel",
     "MemoryState", "Step", "StepError", "run_steps",
     "GroupedStrategy", "best_heuristic", "hilbert", "row_by_row",
     "s1_baseline", "tiled", "zigzag",

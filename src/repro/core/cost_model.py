@@ -39,6 +39,47 @@ class HardwareModel:
 
 
 # ---------------------------------------------------------------------------
+# Multi-chip cluster (beyond-paper: core.multichip).  Same unit system as
+# HardwareModel — ``t_ici`` is the Def-3-style element-transfer cost of the
+# inter-chip interconnect, sitting next to ``t_l``/``t_w``.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """``n_chips`` identical accelerators joined by ICI links in a ring.
+
+    Units (matching the :class:`HardwareModel` docstring above): all
+    durations are accelerator cycles and all sizes are unit-less element
+    counts.  ``chip`` is the per-chip platform model (its ``t_l``/``t_w``
+    price HBM traffic); ``t_ici`` is the cycles to move ONE tensor element
+    across one ICI link — the inter-chip counterpart of ``t_l``.  The
+    duration of an ICI phase is ``bottleneck_link_elements * t_ici``:
+    links transfer in parallel (a ring halo exchange costs one boundary's
+    elements, not the sum), but chips do NOT overlap ICI with compute —
+    the same conservative sequential accounting as the paper's Def 3.
+    On real hardware ``t_ici = dtype_bytes / ici_bw_per_link`` while
+    ``t_l = dtype_bytes / hbm_bw``, so ``t_ici / t_l = hbm_bw /
+    ici_bw_per_link`` (~16 on TPU v5e); see
+    :meth:`TpuChipModel.as_cluster`.
+    """
+
+    chip: HardwareModel
+    n_chips: int = 1
+    t_ici: float = 0.0      # cycles to move one element across one ICI link
+    topology: str = "ring"
+
+    def __post_init__(self):
+        if self.n_chips < 1:
+            raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
+        if self.t_ici < 0:
+            raise ValueError(f"t_ici must be >= 0, got {self.t_ici}")
+        if self.topology != "ring":
+            raise ValueError(
+                f"only the ring topology is modelled (2-D tori are a "
+                f"ROADMAP follow-up), got {self.topology!r}")
+
+
+# ---------------------------------------------------------------------------
 # TPU v5e preset — used by core.planner to drive Pallas BlockSpec choices.
 # The paper's abstract units become bytes/seconds here.
 # ---------------------------------------------------------------------------
@@ -65,6 +106,14 @@ class TpuChipModel:
             nbop_pe=int(self.peak_flops / 2.0),
             size_mem=self.vmem_bytes // dtype_bytes,
             t_l=t_l, t_w=t_l, t_acc=1.0)
+
+    def as_cluster(self, n_chips: int, dtype_bytes: int = 2) -> ClusterModel:
+        """A ring of ``n_chips`` of this chip: ``t_ici`` prices one element
+        over one ICI link in the same seconds unit as ``t_l``."""
+        return ClusterModel(
+            chip=self.as_hardware_model(dtype_bytes),
+            n_chips=n_chips,
+            t_ici=dtype_bytes / self.ici_bw_per_link)
 
 
 TPU_V5E = TpuChipModel()

@@ -1,0 +1,537 @@
+"""Multi-chip sharded offloading planner (beyond-paper: ROADMAP item 1).
+
+The paper formalises offloading ONE convolution to ONE accelerator with one
+on-chip memory.  This module generalises the Def-3 duration accounting to a
+:class:`~repro.core.cost_model.ClusterModel` — ``n_chips`` identical chips
+on an ICI ring — by letting every layer choose a *sharding mode*:
+
+``replicate``
+    The single-chip path: the whole layer runs on chip 0 through the
+    existing ``solver.solve_cached`` machinery; the other chips idle.
+``row``
+    Patch/row sharding: the output rows are split into contiguous bands,
+    one per chip; each chip solves the halo-extended sub-convolution of
+    its band (a smaller :class:`ConvSpec` through the same LRU-cached
+    solver, so equal bands are solved once).  Consecutive row-sharded
+    layers exchange only the halo rows over ICI (Stoutchinin et al.'s
+    layer-cascade halo, arXiv:1902.01492, lifted to chip boundaries).
+``channel``
+    Kernel/output-channel sharding: the kernel set Λ is split across
+    chips (each solves a ``n_kernels/n`` sub-convolution over the full
+    map).  Every chip needs the whole input map — priced as an ICI
+    all-gather — and the outputs stay channel-sharded until a consumer
+    needs a different layout.  This is the regime where sharding relaxes
+    the paper's eq.-12 memory bound: each chip keeps only Λ/n resident,
+    so budgets that force the single-chip planner into S2 kernel-group
+    swapping stay S1-feasible when sharded.
+
+Duration accounting (Def 3 extended):
+
+    layer duration = max over chips of the shard's full Def-3 duration
+                     + bottleneck-link ICI elements * t_ici
+
+ICI transfers are serialised against compute (conservative, predictable —
+the paper's sequential-step spirit) while the ring links themselves run in
+parallel, so an ICI phase costs its *bottleneck link's* element count, in
+the direction of Chen et al.'s communication lower bounds for convolution
+accelerators (arXiv:1911.05662).  Resharding is charged whenever
+consecutive layers pick modes whose activation layouts differ (see
+``_transition_elements``); the mode sequence is chosen by a small
+Viterbi-style dynamic program over (layer, mode) states, so a cheap layer
+never strands the next layer in an expensive layout.
+
+Layout approximations (documented, tested loose): band boundaries between
+consecutive row-sharded layers are assumed aligned (pooling between convs
+redistributes rows on-chip, as in ``core.network_planner``); asymmetric
+shard sizes and 2-D tori are ROADMAP follow-ups.
+
+``plan_multichip_network`` wraps :func:`plan_network` so the 1-chip case
+reproduces today's single-chip plans *exactly* (inter-layer reuse
+included); for ``n_chips > 1`` the per-layer accounting is gross (no
+cross-layer on-chip residency — chips' VMEM is spent on shard working
+sets; co-scheduled multi-chip cascading is a ROADMAP follow-up).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Sequence
+
+from repro.core import solver as solver_mod
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import ClusterModel
+from repro.core.network_planner import (InfeasibleNetworkError, NetworkPlan,
+                                        plan_network, resolve_group_size)
+
+MODES = ("replicate", "row", "channel")
+
+# initial activation layout: the host stages the network input in every
+# chip's DRAM, so layer 0 pays no ICI in any mode.
+_INPUT_LAYOUT = "all"
+
+
+# --------------------------------------------------------------------- #
+# Shard geometry
+# --------------------------------------------------------------------- #
+
+def row_shard_specs(spec: ConvSpec, n_chips: int
+                    ) -> list[tuple[int, tuple[int, int], ConvSpec]]:
+    """Split ``spec``'s output rows into contiguous bands, one per chip.
+
+    Returns ``(chip, (row0, row1), shard_spec)`` triples; the shard spec
+    is the halo-extended sub-convolution of the band (``(rows-1)*s_h +
+    h_k`` input rows), so ``shard_spec.h_out == row1 - row0``.  Chips
+    beyond ``h_out`` idle (no triple emitted)."""
+    n = min(n_chips, spec.h_out)
+    base, extra = divmod(spec.h_out, n)
+    shards = []
+    r0 = 0
+    for c in range(n):
+        rows = base + (1 if c < extra else 0)
+        h_in_band = (rows - 1) * spec.s_h + spec.h_k
+        shards.append((c, (r0, r0 + rows),
+                       dataclasses.replace(spec, h_in=h_in_band)))
+        r0 += rows
+    return shards
+
+
+def kernel_shard_specs(spec: ConvSpec, n_chips: int
+                       ) -> list[tuple[int, tuple[int, int], ConvSpec]]:
+    """Split ``spec``'s kernel set into near-even groups, one per chip.
+
+    Returns ``(chip, (kid0, kid1), shard_spec)`` triples with
+    ``shard_spec.n_kernels == kid1 - kid0``; chips beyond ``n_kernels``
+    idle."""
+    n = min(n_chips, spec.n_kernels)
+    base, extra = divmod(spec.n_kernels, n)
+    shards = []
+    k0 = 0
+    for c in range(n):
+        k = base + (1 if c < extra else 0)
+        shards.append((c, (k0, k0 + k),
+                       dataclasses.replace(spec, n_kernels=k)))
+        k0 += k
+    return shards
+
+
+def halo_elements(spec: ConvSpec) -> int:
+    """Elements one ring boundary exchanges between consecutive
+    row-sharded layers: the consumer's halo rows (``h_k - s_h`` input
+    rows when the stride undershoots the kernel, else none), channel
+    expanded."""
+    return max(0, spec.h_k - spec.s_h) * spec.w_in * spec.c_in
+
+
+# --------------------------------------------------------------------- #
+# ICI pricing: activation layouts and resharding
+# --------------------------------------------------------------------- #
+
+_REQUIRED_LAYOUT = {"replicate": "single", "row": "row", "channel": "all"}
+
+
+def _produced_layout(mode: str, active_chips: int) -> str:
+    """Layout of a layer's output map.  A single active shard owns the
+    whole map, whatever the nominal mode."""
+    if active_chips <= 1:
+        return "single"
+    return {"replicate": "single", "row": "row", "channel": "channel"}[mode]
+
+
+def _transition_elements(frm: str, mode: str, nxt: ConvSpec,
+                         a_full: int, n_chips: int) -> int:
+    """Bottleneck-link ICI elements to reshape an activation from layout
+    ``frm`` into what ``mode`` requires for consumer ``nxt``.
+
+    ``a_full`` is the full activation size (elements).  Ring model:
+    * gather/scatter against one chip serialises ``(n-1)/n * A`` on that
+      chip's links;
+    * an all-gather from any sharded layout moves ``(n-1)/n * A`` per
+      link (each chip forwards everyone else's shard);
+    * a pipelined broadcast from one chip pushes the full ``A`` through
+      its link;
+    * row->row costs only the halo (links run in parallel, so one
+      boundary's rows bound the phase);
+    * channel->row is an all-to-all, priced at the all-gather bound.
+    """
+    if n_chips == 1 or frm == "all":
+        return 0
+    to = _REQUIRED_LAYOUT[mode]
+    partial = math.ceil(a_full * (n_chips - 1) / n_chips)
+    if to == "single":
+        return 0 if frm == "single" else partial
+    if to == "row":
+        if frm == "row":
+            return halo_elements(nxt)
+        return partial                     # scatter / all-to-all
+    # to == "all": every chip needs the full map
+    if frm == "single":
+        return a_full                      # pipelined broadcast
+    return partial                         # ring all-gather
+
+
+# --------------------------------------------------------------------- #
+# Plan dataclasses
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """One chip's slice of one layer."""
+
+    chip: int
+    spec: ConvSpec                       # the shard's sub-convolution
+    p: int
+    result: solver_mod.SolveResult
+    out_rows: tuple[int, int] | None     # row mode: output-row band
+    kernel_range: tuple[int, int] | None  # channel mode: kernel ids
+    gross_duration: float                # full Def-3 duration on its chip
+
+    @property
+    def strategy(self):
+        return self.result.strategy
+
+    @property
+    def mode(self) -> str:
+        return self.result.mode          # 's1' | 's2'
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiChipLayerPlan:
+    """One layer's slot in the cluster schedule."""
+
+    index: int
+    spec: ConvSpec
+    mode: str                            # 'replicate' | 'row' | 'channel'
+    shards: tuple[ShardPlan, ...]
+    compute_duration: float              # max over chips (Def-3 gross)
+    ici_elements: int                    # bottleneck-link elements, inbound
+    ici_duration: float
+    savings: float = 0.0                 # 1-chip path: inter-layer reuse
+
+    def __post_init__(self):
+        if self.duration < -1e-9:
+            raise AssertionError(
+                f"layer {self.index}: negative duration {self.duration}")
+
+    @property
+    def active_chips(self) -> int:
+        return len(self.shards)
+
+    @property
+    def duration(self) -> float:
+        return self.compute_duration + self.ici_duration - self.savings
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiChipPlan:
+    """A solved whole-network cluster schedule."""
+
+    name: str
+    cluster: ClusterModel
+    layers: tuple[MultiChipLayerPlan, ...]
+    total_duration: float
+    final_gather_elements: int           # last layout -> chip 0
+    final_gather_duration: float
+    single_chip_duration: float | None   # plan_network total (reuse incl.)
+    network_plan: NetworkPlan | None     # the delegated 1-chip plan
+    planning_seconds: float
+    solver_calls: int
+    cache_hits: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def n_sharded_layers(self) -> int:
+        return sum(1 for lp in self.layers if lp.mode != "replicate")
+
+    @property
+    def mode_string(self) -> str:
+        tag = {"replicate": "R", "row": "W", "channel": "K"}
+        return "".join(tag[lp.mode] for lp in self.layers)
+
+    @property
+    def ici_duration(self) -> float:
+        return (sum(lp.ici_duration for lp in self.layers)
+                + self.final_gather_duration)
+
+    @property
+    def ici_fraction(self) -> float:
+        if self.total_duration <= 0:
+            return 0.0
+        return self.ici_duration / self.total_duration
+
+    @property
+    def speedup_vs_single_chip(self) -> float | None:
+        if self.single_chip_duration is None or self.total_duration <= 0:
+            return None
+        return self.single_chip_duration / self.total_duration
+
+    @property
+    def peak_footprint(self) -> int:
+        """Largest per-chip resident peak across all shards."""
+        return max(s.strategy.peak_footprint_elements()
+                   for lp in self.layers for s in lp.shards)
+
+    def report(self) -> str:
+        c = self.cluster
+        lines = [f"multichip plan: {self.name}  "
+                 f"({c.n_chips} chips, t_ici={c.t_ici:g}, "
+                 f"{self.n_layers} layers, planned in "
+                 f"{self.planning_seconds:.2f}s, "
+                 f"{self.cache_hits}/{self.solver_calls} cache hits)"]
+        for lp in self.layers:
+            per_chip = " ".join(f"c{s.chip}:{s.gross_duration:g}"
+                                for s in lp.shards)
+            lines.append(
+                f"  L{lp.index}: {lp.mode:<9} x{lp.active_chips} "
+                f"dur={lp.duration:g} (compute {lp.compute_duration:g}"
+                f" + ici {lp.ici_duration:g}"
+                f"{f' - reuse {lp.savings:g}' if lp.savings else ''})"
+                f"  [{per_chip}]")
+        if self.final_gather_duration:
+            lines.append(f"  final gather -> chip 0: "
+                         f"{self.final_gather_elements} elements, "
+                         f"{self.final_gather_duration:g}")
+        tail = f"  total={self.total_duration:g} " \
+               f"(ici {self.ici_fraction:.1%}, modes {self.mode_string})"
+        if self.single_chip_duration is not None:
+            tail += f"; 1-chip {self.single_chip_duration:g} " \
+                    f"(speedup {self.speedup_vs_single_chip:.2f}x)"
+        lines.append(tail)
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------- #
+# Per-layer mode evaluation
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class _ModeEval:
+    mode: str
+    shards: tuple[ShardPlan, ...]
+    compute_duration: float
+
+    @property
+    def layout(self) -> str:
+        return _produced_layout(self.mode, len(self.shards))
+
+
+def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
+               max_group: int | None, solve_kwargs: dict,
+               ) -> _ModeEval | None:
+    """Solve every shard of ``spec`` under ``mode`` through the LRU-cached
+    solver; None when any shard fits no strategy family (mode infeasible
+    for this layer)."""
+    hw = cluster.chip
+    if mode == "replicate":
+        raw = [(0, None, None, spec)]
+    elif mode == "row":
+        raw = [(c, band, None, s)
+               for c, band, s in row_shard_specs(spec, cluster.n_chips)]
+    elif mode == "channel":
+        raw = [(c, None, krange, s)
+               for c, krange, s in kernel_shard_specs(spec, cluster.n_chips)]
+    else:
+        raise ValueError(f"unknown sharding mode {mode!r}")
+    shards = []
+    for chip, band, krange, sspec in raw:
+        p = resolve_group_size(sspec, hw, max_group)
+        try:
+            res = solver_mod.solve_cached(sspec, p, hw, **solve_kwargs)
+        except ValueError:
+            return None
+        if hw.size_mem is not None and \
+                res.strategy.peak_footprint_elements() > hw.size_mem:
+            return None
+        shards.append(ShardPlan(
+            chip=chip, spec=sspec, p=p, result=res,
+            out_rows=band, kernel_range=krange,
+            gross_duration=res.strategy.full_duration(hw)))
+    return _ModeEval(mode=mode, shards=tuple(shards),
+                     compute_duration=max(s.gross_duration for s in shards))
+
+
+def ici_schedule(specs: Sequence[ConvSpec], modes: Sequence[str],
+                 active: Sequence[int], cluster: ClusterModel,
+                 ) -> tuple[list[int], int]:
+    """Re-derive the per-layer inbound ICI element counts (and the final
+    gather to chip 0) from a mode sequence — the pure pricing function
+    the planner charges and the simulator cross-checks."""
+    if len(specs) != len(modes) or len(specs) != len(active):
+        raise ValueError("specs/modes/active length mismatch")
+    per_layer = []
+    layout = _INPUT_LAYOUT
+    for spec, mode, n_act in zip(specs, modes, active):
+        per_layer.append(_transition_elements(
+            layout, mode, spec, spec.num_pixels * spec.c_in,
+            cluster.n_chips))
+        layout = _produced_layout(mode, n_act)
+    last = specs[-1]
+    final = _transition_elements(
+        layout, "replicate", last, last.num_patches * last.c_out,
+        cluster.n_chips)
+    return per_layer, final
+
+
+# --------------------------------------------------------------------- #
+# Front door
+# --------------------------------------------------------------------- #
+
+def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
+                           *,
+                           name: str = "network",
+                           max_group: int | None = 16,
+                           nb_data_reload: int = 2,
+                           polish_iters: int = 6_000,
+                           polish_restarts: int = 4,
+                           use_milp: bool = False,
+                           time_limit: float = 10.0,
+                           rng_seed: int = 0,
+                           modes: Sequence[str] = MODES,
+                           include_single_chip_baseline: bool = True,
+                           ) -> MultiChipPlan:
+    """Plan a conv network on an ICI ring of ``cluster.n_chips`` chips.
+
+    ``n_chips == 1`` delegates to :func:`plan_network` and reproduces its
+    plan exactly (same strategies, same total duration, inter-layer reuse
+    included).  Otherwise every layer's feasible sharding modes are priced
+    — shards through ``solver.solve_cached`` (budget-aware S1/S2 choice,
+    LRU-shared with the single-chip planner), resharding over ICI — and a
+    dynamic program picks the mode sequence minimising total duration
+    including a final gather of the last activation to chip 0.  Raises
+    :class:`InfeasibleNetworkError` when some layer fits under no mode.
+    """
+    specs = list(specs)
+    if not specs:
+        raise ValueError("empty network")
+    solve_kwargs = dict(nb_data_reload=nb_data_reload,
+                        time_limit=time_limit, polish_iters=polish_iters,
+                        use_milp=use_milp, rng_seed=rng_seed,
+                        polish_restarts=polish_restarts)
+    plan_kwargs = dict(max_group=max_group, **solve_kwargs)
+
+    if cluster.n_chips == 1:
+        net = plan_network(specs, cluster.chip, name=name, **plan_kwargs)
+        layers = tuple(
+            MultiChipLayerPlan(
+                index=lp.index, spec=lp.spec, mode="replicate",
+                shards=(ShardPlan(
+                    chip=0, spec=lp.spec, p=lp.p, result=lp.result,
+                    out_rows=None, kernel_range=None,
+                    gross_duration=lp.gross_duration),),
+                compute_duration=lp.gross_duration,
+                ici_elements=0, ici_duration=0.0,
+                savings=lp.input_load_saved + lp.write_back_saved)
+            for lp in net.layers)
+        return MultiChipPlan(
+            name=name, cluster=cluster, layers=layers,
+            total_duration=net.total_duration,
+            final_gather_elements=0, final_gather_duration=0.0,
+            single_chip_duration=net.total_duration,
+            network_plan=net,
+            planning_seconds=net.planning_seconds,
+            solver_calls=net.solver_calls, cache_hits=net.cache_hits)
+
+    hits0 = calls0 = 0
+    info = solver_mod.solve_cached.cache_info()
+    hits0, calls0 = info.hits, info.hits + info.misses
+    t0 = time.perf_counter()
+
+    # 1) per-layer feasible mode evaluations
+    evals: list[dict[str, _ModeEval]] = []
+    for i, spec in enumerate(specs):
+        layer_evals = {}
+        for mode in modes:
+            ev = _eval_mode(spec, mode, cluster, max_group, solve_kwargs)
+            if ev is not None:
+                layer_evals[mode] = ev
+        if not layer_evals:
+            raise InfeasibleNetworkError(
+                f"layer {i} ({spec.c_in}x{spec.h_in}x{spec.w_in}"
+                f"->{spec.c_out}): no sharding mode fits "
+                f"size_mem={cluster.chip.size_mem} on "
+                f"{cluster.n_chips} chips")
+        evals.append(layer_evals)
+
+    # 2) Viterbi DP over (layer, mode): resharding couples neighbours
+    t_ici = cluster.t_ici
+    n = cluster.n_chips
+    # cost[mode] = best total through layer i ending in this mode
+    cost: dict[str, float] = {}
+    back: list[dict[str, tuple[str | None, int]]] = []
+    for i, layer_evals in enumerate(evals):
+        nxt_cost: dict[str, float] = {}
+        choices: dict[str, tuple[str | None, int]] = {}
+        # resharding moves the consumer's (post-pooling) input map — the
+        # tensor that must land in the consumer's layout.
+        a_full = specs[i].num_pixels * specs[i].c_in
+        for mode, ev in layer_evals.items():
+            if i == 0:
+                elems = _transition_elements(
+                    _INPUT_LAYOUT, mode, specs[i], a_full, n)
+                nxt_cost[mode] = ev.compute_duration + elems * t_ici
+                choices[mode] = (None, elems)
+                continue
+            best_prev, best_val, best_elems = None, float("inf"), 0
+            for pmode, pcost in cost.items():
+                elems = _transition_elements(
+                    evals[i - 1][pmode].layout, mode, specs[i], a_full, n)
+                val = pcost + ev.compute_duration + elems * t_ici
+                if val < best_val:
+                    best_prev, best_val, best_elems = pmode, val, elems
+            nxt_cost[mode] = best_val
+            choices[mode] = (best_prev, best_elems)
+        cost = nxt_cost
+        back.append(choices)
+
+    # final gather of the last activation to chip 0
+    last = specs[-1]
+    a_last = last.num_patches * last.c_out
+    best_mode, best_total, final_elems = None, float("inf"), 0
+    for mode, val in cost.items():
+        elems = _transition_elements(
+            evals[-1][mode].layout, "replicate", last, a_last, n)
+        if val + elems * t_ici < best_total:
+            best_mode, best_total = mode, val + elems * t_ici
+            final_elems = elems
+
+    # 3) backtrack
+    chosen: list[str] = [best_mode]
+    in_elems: list[int] = []
+    for i in range(len(specs) - 1, -1, -1):
+        prev_mode, elems = back[i][chosen[0]]
+        in_elems.insert(0, elems)
+        if i > 0:
+            chosen.insert(0, prev_mode)
+    planning_seconds = time.perf_counter() - t0
+
+    layers = tuple(
+        MultiChipLayerPlan(
+            index=i, spec=specs[i], mode=chosen[i],
+            shards=evals[i][chosen[i]].shards,
+            compute_duration=evals[i][chosen[i]].compute_duration,
+            ici_elements=in_elems[i],
+            ici_duration=in_elems[i] * t_ici)
+        for i in range(len(specs)))
+
+    single = None
+    if include_single_chip_baseline:
+        try:
+            single = plan_network(specs, cluster.chip, name=name,
+                                  **plan_kwargs).total_duration
+        except InfeasibleNetworkError:
+            single = None               # sharding extends feasibility
+
+    info = solver_mod.solve_cached.cache_info()
+    return MultiChipPlan(
+        name=name, cluster=cluster, layers=layers,
+        total_duration=best_total,
+        final_gather_elements=final_elems,
+        final_gather_duration=final_elems * t_ici,
+        single_chip_duration=single,
+        network_plan=None,
+        planning_seconds=planning_seconds,
+        solver_calls=(info.hits + info.misses) - calls0,
+        cache_hits=info.hits - hits0)

@@ -9,10 +9,12 @@ final DRAM output is checked against a reference convolution.
 from repro.sim.accelerator import Accelerator, OnChipMemory
 from repro.sim.dram import Dram
 from repro.sim.layer import ConvLayer
+from repro.sim.multichip import MultiChipSimReport, simulate_multichip
 from repro.sim.network import NetworkSimReport, simulate_network
 from repro.sim.system import SimReport, System
 from repro.sim.functional import reference_conv
 
 __all__ = ["Accelerator", "OnChipMemory", "Dram", "ConvLayer",
            "System", "SimReport", "reference_conv",
-           "NetworkSimReport", "simulate_network"]
+           "NetworkSimReport", "simulate_network",
+           "MultiChipSimReport", "simulate_multichip"]

@@ -1,0 +1,164 @@
+"""Cluster simulation: execute every shard of a ``MultiChipPlan`` through
+the existing single-chip machinery and reconcile the plan's accounting.
+
+Each layer materialises ONE shared :class:`ConvLayer` and every shard's
+sub-problem is carved out of it — a row band's halo-extended input window
+(full kernel set) or a kernel subset (full input) — then run unchanged
+through the Sec-6 ``System`` (S1 strategies) or ``sim.s2.run_s2``
+(kernel-group swapping).  The shard outputs are stitched back into the
+full output tensor and compared against the full layer's reference
+convolution, so band offsets, halo extents, and kernel ranges are
+validated end to end, not just each shard in isolation.  The
+reconciliation discipline matches ``sim.network``:
+
+  * ``correct`` — every shard's functional run passes AND the stitched
+    per-layer outputs equal the full reference convolution with no gaps;
+  * ``accounting_exact`` — every shard's measured Def-3 duration equals
+    the plan's ``gross_duration`` for that shard, every layer's
+    ``compute_duration`` equals the max over its shards, and the plan's
+    per-layer ICI charges equal an independent re-pricing of the chosen
+    mode sequence (``core.multichip.ici_schedule``);
+  * ``peak_within_budget`` — every shard's *measured* peak stays within
+    the per-chip ``size_mem``;
+  * ICI transfers themselves are analytic (the bottleneck-link element
+    counts are exact integers by construction; there is no functional
+    payload to move between simulated chips), exactly as the inter-layer
+    reuse savings are analytic in ``sim.network``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import numpy as np
+
+from repro.core.multichip import MultiChipPlan, ShardPlan, ici_schedule
+from repro.core.strategies_s2 import S2Strategy
+from repro.sim.functional import reference_conv
+from repro.sim.layer import ConvLayer
+from repro.sim.s2 import S2Report, run_s2
+from repro.sim.system import SimReport, System
+
+LayerReport = Union[SimReport, S2Report]
+
+
+def _carve_shard(full: ConvLayer, shard: ShardPlan) -> ConvLayer:
+    """The shard's sub-problem sliced out of the shared layer data."""
+    spec = full.spec
+    if shard.out_rows is not None:                 # row band
+        r0, _ = shard.out_rows
+        h0 = r0 * spec.s_h
+        return ConvLayer(
+            spec=shard.spec,
+            input=full.input[:, h0:h0 + shard.spec.h_in, :].copy(),
+            kernels=full.kernels.copy())
+    if shard.kernel_range is not None:             # kernel subset
+        k0, k1 = shard.kernel_range
+        return ConvLayer(spec=shard.spec, input=full.input.copy(),
+                         kernels=full.kernels[k0:k1].copy())
+    return full                                    # replicate
+
+
+@dataclasses.dataclass
+class MultiChipSimReport:
+    plan: MultiChipPlan
+    shard_reports: list[list[LayerReport]]   # [layer][shard]
+    stitched_ok: list[bool]       # per layer: shards reassemble the output
+    sim_compute_duration: float   # sum over layers of max-over-chips
+    modeled_total_duration: float
+    elements_read: int            # HBM traffic summed over all chips
+    elements_written: int
+    total_macs: int
+
+    @property
+    def correct(self) -> bool:
+        return all(self.stitched_ok) and all(
+            r.correct for reps in self.shard_reports for r in reps)
+
+    @property
+    def accounting_exact(self) -> bool:
+        """Per-shard sim == plan gross, per-layer compute == max shard,
+        and the plan's ICI charges match an independent re-pricing."""
+        for reps, lp in zip(self.shard_reports, self.plan.layers):
+            for r, shard in zip(reps, lp.shards):
+                if abs(r.total_duration - shard.gross_duration) > 1e-9:
+                    return False
+            if abs(max(r.total_duration for r in reps)
+                   - lp.compute_duration) > 1e-9:
+                return False
+        per_layer, final = ici_schedule(
+            [lp.spec for lp in self.plan.layers],
+            [lp.mode for lp in self.plan.layers],
+            [lp.active_chips for lp in self.plan.layers],
+            self.plan.cluster)
+        if final != self.plan.final_gather_elements:
+            return False
+        return all(e == lp.ici_elements
+                   for e, lp in zip(per_layer, self.plan.layers))
+
+    @property
+    def peak_within_budget(self) -> bool:
+        """Every shard's measured peak must respect the per-chip budget."""
+        cap = self.plan.cluster.chip.size_mem
+        if cap is None:
+            return True
+        return all(
+            (r.peak_memory if isinstance(r, S2Report) else r.peak_footprint)
+            <= cap for reps in self.shard_reports for r in reps)
+
+    def summary(self) -> str:
+        return (f"multichip sim: {self.plan.name} "
+                f"chips={self.plan.cluster.n_chips} "
+                f"layers={len(self.shard_reports)} correct={self.correct} "
+                f"accounting_exact={self.accounting_exact} "
+                f"peak_within_budget={self.peak_within_budget} "
+                f"sim_compute={self.sim_compute_duration:g} "
+                f"modeled_total={self.modeled_total_duration:g} "
+                f"dram_rd={self.elements_read} dram_wr={self.elements_written}")
+
+
+def simulate_multichip(plan: MultiChipPlan, seed: int = 0,
+                       check: bool = True) -> MultiChipSimReport:
+    """Run every shard of every layer functionally — against ONE shared
+    layer instance per layer — stitch the shard outputs, and cross-check
+    the cluster duration model (see the module note for the discipline)."""
+    hw = plan.cluster.chip
+    shard_reports: list[list[LayerReport]] = []
+    stitched_ok: list[bool] = []
+    for lp in plan.layers:
+        full = ConvLayer.random(lp.spec, seed=seed + lp.index)
+        ref = reference_conv(full)
+        assembled = np.full_like(ref, np.nan)
+        reps: list[LayerReport] = []
+        for shard in lp.shards:
+            layer = _carve_shard(full, shard)
+            if isinstance(shard.strategy, S2Strategy):
+                rep = run_s2(layer, hw, shard.strategy)
+            else:
+                rep = System(layer, hw).run(shard.strategy, check=check)
+            reps.append(rep)
+            if shard.out_rows is not None:
+                r0, r1 = shard.out_rows
+                assembled[:, r0:r1, :] = rep.output
+            elif shard.kernel_range is not None:
+                k0, k1 = shard.kernel_range
+                assembled[k0:k1] = rep.output
+            else:
+                assembled[:] = rep.output
+        stitched_ok.append(
+            not np.any(np.isnan(assembled)) and bool(
+                np.allclose(assembled, ref, rtol=1e-4, atol=1e-4)))
+        shard_reports.append(reps)
+    return MultiChipSimReport(
+        plan=plan,
+        shard_reports=shard_reports,
+        stitched_ok=stitched_ok,
+        sim_compute_duration=sum(max(r.total_duration for r in reps)
+                                 for reps in shard_reports),
+        modeled_total_duration=plan.total_duration,
+        elements_read=sum(r.elements_read
+                          for reps in shard_reports for r in reps),
+        elements_written=sum(r.elements_written
+                             for reps in shard_reports for r in reps),
+        total_macs=sum(r.total_macs
+                       for reps in shard_reports for r in reps))
