@@ -11,8 +11,16 @@ below the largest layer's kernel set force the kernel-group-swapping
 fallback, and the plan must stay feasible and keep beating greedy.
 ``--sweep-chips`` adds the multi-chip scaling curve: each network is
 planned on 1/2/4/8-chip ICI rings (``core.multichip``) at the tight
-budget where sharding matters (half the largest kernel set), recording
-the chosen mode string, ICI fraction, and speedup over the 1-chip plan.
+budget where sharding matters (half the largest kernel set), recording —
+for both the serialised PR-3 accounting and the overlap + duration-
+balanced model — the chosen mode string, ICI fraction, and speedup over
+the 1-chip plan.
+
+``--profile`` emits per-stage planner wall-clock and solver-LRU hit
+rates (stable keys ``planner_seconds`` / ``gain_vs_pr3`` against the
+frozen ``PR3_BASELINE`` numbers) so future PRs can diff the planner-perf
+trajectory, and ``--max-planner-seconds`` turns the total planner
+wall-clock into a CI pass/fail guard.
 
 Full-scope runs (no ``--fast``, no ``--networks`` filter) also refresh
 ``BENCH_network_plan.json`` at the repo root — a stable, compact summary
@@ -24,7 +32,8 @@ it untouched so degraded numbers never clobber the trajectory.
         [--networks lenet5 resnet8 tight4] [--size-mem N] \
         [--sweep-mem auto | --sweep-mem 2000 8000 ...] \
         [--sweep-chips auto | --sweep-chips 1 2 4 ...] \
-        [--restarts 4] [--iters 6000] [--fast] \
+        [--restarts 4] [--iters 6000] [--fast] [--profile] \
+        [--max-planner-seconds S] \
         [--out benchmarks/results/network_plan.json] \
         [--bench-out BENCH_network_plan.json]
 
@@ -47,6 +56,59 @@ from repro.core.cost_model import HardwareModel
 from repro.core.multichip import plan_multichip_network
 from repro.core.network_planner import InfeasibleNetworkError, plan_network
 
+# ------------------------------------------------------------------ #
+# Frozen PR-3 planner numbers (full-scope defaults, rng_seed=0): the
+# fixed reference for the ``gain_vs_pr3`` trajectory series.  Values are
+# modeled total durations; chip points are the serialised-accounting
+# totals at the tight budget (half the largest kernel set).
+# ------------------------------------------------------------------ #
+PR3_BASELINE = {
+    "networks": {
+        "lenet5": 3845.0, "resnet8": 75798.0,
+        "tight2": 5903.0, "tight4": 24439.0,
+    },
+    "tight_sweep": {
+        ("lenet5", 600): 9938.0, ("lenet5", 1200): 7722.0,
+        ("lenet5", 2400): 6242.0, ("lenet5", 4800): 4629.0,
+        ("tight2", 1152): 8596.0, ("tight2", 2304): 7152.0,
+        ("tight2", 4608): 7146.0, ("tight2", 9216): 5903.0,
+        ("tight4", 4608): 26769.0, ("tight4", 9216): 25450.0,
+        ("tight4", 18432): 25448.0, ("tight4", 36864): 24439.0,
+        ("resnet8", 9216): 99022.0, ("resnet8", 18432): 89228.0,
+        ("resnet8", 36864): 81090.0, ("resnet8", 73728): 75798.0,
+    },
+    "chip_sweep": {
+        ("lenet5", 1): 7722.0, ("lenet5", 2): 7722.0,
+        ("lenet5", 4): 7722.0, ("lenet5", 8): 7722.0,
+        ("resnet8", 1): 89228.0, ("resnet8", 2): 90668.0,
+        ("resnet8", 4): 85422.0, ("resnet8", 8): 83758.0,
+        ("tight2", 1): 7152.0, ("tight2", 2): 7152.0,
+        ("tight2", 4): 7152.0, ("tight2", 8): 7152.0,
+        ("tight4", 1): 25450.0, ("tight4", 2): 20669.0,
+        ("tight4", 4): 17529.0, ("tight4", 8): 16209.0,
+    },
+}
+
+
+def _gain_vs_pr3(table: str, key, duration: float) -> float | None:
+    base = PR3_BASELINE[table].get(key)
+    if not base:
+        return None
+    return round(1.0 - duration / base, 4)
+
+
+def _lru_stats() -> dict:
+    s = solver.solve_cached.cache_info()
+    k = solver.best_s2_cached.cache_info()
+    return {
+        "solve_cached": {"hits": s.hits, "misses": s.misses,
+                         "hit_rate": round(s.hits / max(1, s.hits
+                                                        + s.misses), 4)},
+        "best_s2_cached": {"hits": k.hits, "misses": k.misses,
+                           "hit_rate": round(k.hits / max(1, k.hits
+                                                          + k.misses), 4)},
+    }
+
 
 def bench_network(name: str, hw: HardwareModel, *, iters: int,
                   restarts: int, rng_seed: int) -> dict:
@@ -65,6 +127,8 @@ def bench_network(name: str, hw: HardwareModel, *, iters: int,
         "n_s2_layers": plan.n_s2_layers,
         "peak_footprint": plan.peak_footprint,
         "planning_wall_s": round(wall, 4),
+        "planner_seconds": round(wall, 4),
+        "gain_vs_pr3": _gain_vs_pr3("networks", name, plan.total_duration),
         "planning_layers_per_s": round(plan.n_layers / max(wall, 1e-9), 2),
         "solver_calls": plan.solver_calls,
         "cache_hits": plan.cache_hits,
@@ -117,6 +181,8 @@ def sweep_tight_memory(name: str, budgets: list[int], *, nbop_pe: int,
             "total_duration": plan.total_duration,
             "greedy_baseline_duration": plan.baseline_duration,
             "gain_vs_baseline": round(plan.gain_vs_baseline, 4),
+            "gain_vs_pr3": _gain_vs_pr3("tight_sweep", (name, size_mem),
+                                        plan.total_duration),
             "beats_baseline": plan.total_duration < plan.baseline_duration,
             "layer_modes": [lp.mode for lp in plan.layers],
         })
@@ -127,7 +193,10 @@ def sweep_chip_counts(name: str, chip_counts: list[int], *, nbop_pe: int,
                       iters: int, restarts: int, rng_seed: int) -> dict:
     """Plan ``name`` on ICI rings of each chip count at the tight budget
     (half the largest kernel set Λ — the regime where sharding either
-    restores S1 feasibility or loses to resharding ICI traffic)."""
+    restores S1 feasibility or loses to resharding ICI traffic).  Every
+    point is planned twice: with the serialised PR-3 accounting
+    (``overlap=False``) and with overlap + duration-balanced bands — the
+    LRU-shared shard solves make the second plan nearly free."""
     specs = NETWORKS[name]
     size_mem = max(s.kernel_elements for s in specs) // 2
     rows = []
@@ -136,10 +205,15 @@ def sweep_chip_counts(name: str, chip_counts: list[int], *, nbop_pe: int,
         cluster = make_cluster(n_chips, nbop_pe=nbop_pe, size_mem=size_mem)
         t0 = time.perf_counter()
         try:
-            plan = plan_multichip_network(
+            ser = plan_multichip_network(
                 specs, cluster, name=name, polish_iters=iters,
                 polish_restarts=restarts, rng_seed=rng_seed,
                 include_single_chip_baseline=False)
+            plan = plan_multichip_network(
+                specs, cluster, name=name, polish_iters=iters,
+                polish_restarts=restarts, rng_seed=rng_seed,
+                include_single_chip_baseline=False,
+                overlap=True, balance_rows=True)
         except InfeasibleNetworkError as e:
             rows.append({"n_chips": n_chips, "feasible": False,
                          "error": str(e)})
@@ -151,13 +225,17 @@ def sweep_chip_counts(name: str, chip_counts: list[int], *, nbop_pe: int,
             "n_chips": n_chips,
             "feasible": True,
             "total_duration": plan.total_duration,
+            "serialized_duration": ser.total_duration,
             "modes": plan.mode_string,
+            "serialized_modes": ser.mode_string,
             "n_sharded_layers": plan.n_sharded_layers,
             "ici_fraction": round(plan.ici_fraction, 4),
             "peak_footprint": plan.peak_footprint,
             "planning_wall_s": round(wall, 4),
             "speedup_vs_1chip": (round(single / plan.total_duration, 4)
                                  if single else None),
+            "gain_vs_pr3": _gain_vs_pr3("chip_sweep", (name, n_chips),
+                                        plan.total_duration),
         })
     return {"network": name, "size_mem": size_mem,
             "t_ici": make_cluster(1, nbop_pe=nbop_pe).t_ici,
@@ -165,8 +243,12 @@ def sweep_chip_counts(name: str, chip_counts: list[int], *, nbop_pe: int,
 
 
 def write_bench_summary(path: str, rows: list[dict],
-                        chip_sweeps: list[dict]) -> None:
-    """Stable repo-root summary: the perf-trajectory file other PRs diff."""
+                        chip_sweeps: list[dict],
+                        sweeps: list[dict] | None = None,
+                        profile: dict | None = None) -> None:
+    """Stable repo-root summary: the perf-trajectory file other PRs diff.
+    ``planner_seconds`` and ``gain_vs_pr3`` are the stable trajectory
+    keys (baseline: the frozen ``PR3_BASELINE`` table)."""
     summary = {
         "benchmark": "network_plan",
         "networks": [
@@ -174,20 +256,35 @@ def write_bench_summary(path: str, rows: list[dict],
              "feasible": r["feasible"],
              **({"total_duration": r["total_duration"],
                  "gain_vs_baseline": r["gain_vs_baseline"],
-                 "planning_wall_s": r["planning_wall_s"]}
+                 "gain_vs_pr3": r["gain_vs_pr3"],
+                 "planning_wall_s": r["planning_wall_s"],
+                 "planner_seconds": r["planner_seconds"]}
                 if r["feasible"] else {})}
             for r in sorted(rows, key=lambda r: r["network"])],
+        "tight_sweep": [
+            {"network": sw["network"],
+             "points": [
+                 {"size_mem": p["size_mem"], "feasible": p["feasible"],
+                  **({"total_duration": p["total_duration"],
+                      "gain_vs_pr3": p["gain_vs_pr3"]}
+                     if p["feasible"] else {})}
+                 for p in sw["points"]]}
+            for sw in sorted(sweeps or [], key=lambda s: s["network"])],
         "chip_sweep": [
             {"network": sw["network"], "size_mem": sw["size_mem"],
              "points": [
                  {"n_chips": p["n_chips"], "feasible": p["feasible"],
                   **({"total_duration": p["total_duration"],
+                      "serialized_duration": p["serialized_duration"],
                       "modes": p["modes"],
-                      "speedup_vs_1chip": p["speedup_vs_1chip"]}
+                      "speedup_vs_1chip": p["speedup_vs_1chip"],
+                      "gain_vs_pr3": p["gain_vs_pr3"]}
                      if p["feasible"] else {})}
                  for p in sw["points"]]}
             for sw in sorted(chip_sweeps, key=lambda s: s["network"])],
     }
+    if profile is not None:
+        summary["profile"] = profile
     with open(path, "w") as f:
         json.dump(summary, f, indent=1, sort_keys=True)
         f.write("\n")
@@ -214,6 +311,14 @@ def main(argv=None) -> int:
     ap.add_argument("--fast", action="store_true",
                     help="smoke preset: small networks, tiny polish budget, "
                          "auto sweeps")
+    ap.add_argument("--profile", action="store_true",
+                    help="emit per-stage planner wall-clock and solver-LRU "
+                         "hit rates (stable keys planner_seconds / "
+                         "gain_vs_pr3) for the perf trajectory")
+    ap.add_argument("--max-planner-seconds", type=float, default=None,
+                    help="fail (exit 1) when the total planner wall-clock "
+                         "exceeds this bound — the CI guardrail against "
+                         "accidentally un-capping polish budgets")
     ap.add_argument("--out", default="benchmarks/results/network_plan.json")
     ap.add_argument("--bench-out", default="BENCH_network_plan.json",
                     help="stable perf-trajectory summary at the repo root "
@@ -235,8 +340,11 @@ def main(argv=None) -> int:
 
     hw = HardwareModel(nbop_pe=args.nbop_pe, size_mem=args.size_mem)
     solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+    t_start = time.perf_counter()
     rows = [bench_network(n, hw, iters=args.iters, restarts=args.restarts,
                           rng_seed=args.rng_seed) for n in networks]
+    t_networks = time.perf_counter()
 
     sweeps = []
     if args.sweep_mem:
@@ -248,6 +356,7 @@ def main(argv=None) -> int:
             sweeps.append(sweep_tight_memory(
                 n, budgets, nbop_pe=args.nbop_pe, iters=args.iters,
                 restarts=args.restarts, rng_seed=args.rng_seed))
+    t_mem_sweep = time.perf_counter()
 
     chip_sweeps = []
     if args.sweep_chips:
@@ -256,6 +365,20 @@ def main(argv=None) -> int:
             chip_sweeps.append(sweep_chip_counts(
                 n, counts, nbop_pe=args.nbop_pe, iters=args.iters,
                 restarts=args.restarts, rng_seed=args.rng_seed))
+    t_end = time.perf_counter()
+
+    total_wall = t_end - t_start
+    profile = None
+    if args.profile:
+        profile = {
+            "planner_seconds": round(total_wall, 4),
+            "stages": {
+                "networks_s": round(t_networks - t_start, 4),
+                "mem_sweep_s": round(t_mem_sweep - t_networks, 4),
+                "chip_sweep_s": round(t_end - t_mem_sweep, 4),
+            },
+            "lru": _lru_stats(),
+        }
 
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
@@ -263,13 +386,16 @@ def main(argv=None) -> int:
               "networks": rows,
               "tight_memory_sweep": sweeps,
               "chip_sweep": chip_sweeps}
+    if profile is not None:
+        result["profile"] = profile
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     if trajectory_grade:
-        write_bench_summary(args.bench_out, rows, chip_sweeps)
+        write_bench_summary(args.bench_out, rows, chip_sweeps,
+                            sweeps=sweeps, profile=profile)
 
     for r in rows:
         if not r["feasible"]:
@@ -304,8 +430,17 @@ def main(argv=None) -> int:
             print(f"[chips] {sw['network']} mem={sw['size_mem']} "
                   f"n={pt['n_chips']}: [{pt['modes']}] "
                   f"dur {pt['total_duration']:g} "
-                  f"(ici {pt['ici_fraction']:.1%}"
+                  f"(serialized {pt['serialized_duration']:g}, "
+                  f"ici {pt['ici_fraction']:.1%}"
                   f"{f', {sp}x vs 1 chip' if sp else ''})")
+    if profile is not None:
+        lru = profile["lru"]
+        print(f"[profile] planner {profile['planner_seconds']}s "
+              f"(networks {profile['stages']['networks_s']}s, "
+              f"mem sweep {profile['stages']['mem_sweep_s']}s, "
+              f"chip sweep {profile['stages']['chip_sweep_s']}s); "
+              f"solve LRU {lru['solve_cached']['hit_rate']:.0%} hits, "
+              f"S2 LRU {lru['best_s2_cached']['hit_rate']:.0%} hits")
     print("saved ->", args.out,
           *(["and", args.bench_out] if trajectory_grade else []))
 
@@ -314,9 +449,17 @@ def main(argv=None) -> int:
     for sw in sweeps:
         feas = [p for p in sw["points"] if p["feasible"]]
         ok = ok and bool(feas) and any(p["beats_baseline"] for p in feas)
-    # the chip sweep must stay feasible at every requested count
+    # the chip sweep must stay feasible at every requested count, and the
+    # overlap model must never lose to the serialised accounting
     for sw in chip_sweeps:
         ok = ok and all(p["feasible"] for p in sw["points"])
+        ok = ok and all(p["total_duration"] <= p["serialized_duration"]
+                        for p in sw["points"] if p["feasible"])
+    if args.max_planner_seconds is not None and \
+            total_wall > args.max_planner_seconds:
+        print(f"[guard] planner wall-clock {total_wall:.1f}s exceeds "
+              f"--max-planner-seconds {args.max_planner_seconds:.1f}s")
+        ok = False
     return 0 if ok else 1
 
 

@@ -22,11 +22,13 @@ FAST = dict(polish_iters=2000, polish_restarts=2)
 
 
 def run_once(name: str, n_chips: int, size_mem: int | None,
-             nbop_pe: int, ici_factor: float) -> None:
+             nbop_pe: int, ici_factor: float,
+             overlap: bool = False, balance_rows: bool = False) -> None:
     cluster = make_cluster(n_chips, nbop_pe=nbop_pe, size_mem=size_mem,
                            ici_factor=ici_factor)
     plan = plan_multichip_network(NETWORKS[name], cluster, name=name,
-                                  **FAST)
+                                  overlap=overlap,
+                                  balance_rows=balance_rows, **FAST)
     print(plan.report())
     print()
     rep = simulate_multichip(plan)
@@ -37,7 +39,8 @@ def run_once(name: str, n_chips: int, size_mem: int | None,
     print("functional + accounting + per-chip memory checks passed")
 
 
-def crossover(name: str, nbop_pe: int, ici_factor: float) -> None:
+def crossover(name: str, nbop_pe: int, ici_factor: float,
+              overlap: bool = False, balance_rows: bool = False) -> None:
     """Budgets shrink top-to-bottom, chips grow left-to-right: watch the
     mode string flip from all-replicate to row (W) / channel (K) shards
     exactly where sharding buys back S1 feasibility."""
@@ -55,7 +58,8 @@ def crossover(name: str, nbop_pe: int, ici_factor: float) -> None:
             try:
                 plan = plan_multichip_network(
                     specs, cluster, name=name, polish_iters=800,
-                    polish_restarts=1, include_single_chip_baseline=False)
+                    polish_restarts=1, include_single_chip_baseline=False,
+                    overlap=overlap, balance_rows=balance_rows)
             except InfeasibleNetworkError:
                 cells.append(f"n{n_chips}: infeasible")
                 continue
@@ -79,17 +83,25 @@ def main() -> None:
     ap.add_argument("--crossover", action="store_true",
                     help="sweep (budget x chip count) and show the mode "
                          "string at each point")
+    ap.add_argument("--overlap", action="store_true",
+                    help="price double-buffered halo exchange: per-layer "
+                         "duration max(compute, ICI) instead of the sum")
+    ap.add_argument("--balance-rows", action="store_true",
+                    help="size row bands by solved per-chip duration "
+                         "instead of raw row counts")
     args = ap.parse_args()
 
     if args.crossover:
-        crossover(args.network, args.nbop_pe, args.ici_factor)
+        crossover(args.network, args.nbop_pe, args.ici_factor,
+                  overlap=args.overlap, balance_rows=args.balance_rows)
         return
     size_mem = args.size_mem
     if size_mem is None:
         specs = NETWORKS[args.network]
         size_mem = max(s.kernel_elements for s in specs) // 2
     run_once(args.network, args.chips, size_mem, args.nbop_pe,
-             args.ici_factor)
+             args.ici_factor, overlap=args.overlap,
+             balance_rows=args.balance_rows)
 
 
 if __name__ == "__main__":

@@ -177,3 +177,116 @@ def n_var_literal(spec: ConvSpec, k: int) -> int:
     """Paper's variable-count formula (Sec 7.1):
     N_var = K * (3*(H_in*W_in) + H_out*W_out)."""
     return k * (3 * spec.num_pixels + spec.num_patches)
+
+
+# --------------------------------------------------------------------- #
+# S2 schedule-order MILP (tiny instances)
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class S2OrderModel:
+    """Exact schedule ordering of U fixed (patch-group, kernel-group)
+    cells as a max-overlap Hamiltonian-path MILP.
+
+    The S2 load cost decomposes as ``constant - sum of consecutive-cell
+    overlaps`` (``|A \\ B| = |A| - |A ∩ B|``; the constant is fixed once
+    the partitions are), so the order that minimises duration maximises
+    the summed overlap ``W[u,v]`` along the schedule path.  Variables:
+    ``x[u,t]`` (cell u at slot t, binary) and ``w[u,v,t]`` (cells u,v at
+    consecutive slots t,t+1; continuous — forced to the product of the
+    x's by the three linking rows).  Quadratic in U: tiny instances only.
+    """
+
+    n: int
+    c: np.ndarray
+    a: sparse.csr_matrix
+    lb: np.ndarray
+    ub: np.ndarray
+    integrality: np.ndarray
+    n_x: int
+
+    @property
+    def num_vars(self) -> int:
+        return len(self.c)
+
+    def x_col(self, u: int, t: int) -> int:
+        return u * self.n + t
+
+    def extract_order(self, x: np.ndarray) -> list[int]:
+        order = []
+        for t in range(self.n):
+            for u in range(self.n):
+                if x[self.x_col(u, t)] > 0.5:
+                    order.append(u)
+                    break
+        return order
+
+
+def build_s2_order_ilp(w_overlap: np.ndarray) -> S2OrderModel:
+    """Assemble the order MILP for an overlap matrix ``w_overlap``
+    (symmetric; forbidden adjacencies carry large negative entries)."""
+    n = len(w_overlap)
+    n_x = n * n
+    pairs = [(u, v) for u in range(n) for v in range(n) if u != v]
+    w_col = {}
+    for t in range(n - 1):
+        for u, v in pairs:
+            w_col[(u, v, t)] = n_x + len(w_col)
+    n_vars = n_x + len(w_col)
+
+    c = np.zeros(n_vars)
+    for (u, v, t), col in w_col.items():
+        c[col] = -float(w_overlap[u, v])     # maximise summed overlap
+
+    rows, cols, vals = [], [], []
+    con_lb, con_ub = [], []
+    r = 0
+
+    def add(entries, lo, hi):
+        nonlocal r
+        for c_, v_ in entries:
+            rows.append(r)
+            cols.append(c_)
+            vals.append(v_)
+        con_lb.append(lo)
+        con_ub.append(hi)
+        r += 1
+
+    def x_col(u, t):
+        return u * n + t
+
+    for u in range(n):                        # each cell in one slot
+        add([(x_col(u, t), 1.0) for t in range(n)], 1.0, 1.0)
+    for t in range(n):                        # each slot holds one cell
+        add([(x_col(u, t), 1.0) for u in range(n)], 1.0, 1.0)
+    for (u, v, t), col in w_col.items():      # w = x[u,t] AND x[v,t+1]
+        add([(col, 1.0), (x_col(u, t), -1.0)], -np.inf, 0.0)
+        add([(col, 1.0), (x_col(v, t + 1), -1.0)], -np.inf, 0.0)
+        add([(col, 1.0), (x_col(u, t), -1.0), (x_col(v, t + 1), -1.0)],
+            -1.0, np.inf)
+
+    integrality = np.zeros(n_vars)
+    integrality[:n_x] = 1                     # w relaxes to [0, 1]
+    return S2OrderModel(
+        n=n, c=c,
+        a=sparse.csr_matrix((vals, (rows, cols)), shape=(r, n_vars)),
+        lb=np.asarray(con_lb), ub=np.asarray(con_ub),
+        integrality=integrality, n_x=n_x)
+
+
+def solve_s2_order(w_overlap: np.ndarray, time_limit: float = 2.0,
+                   ) -> tuple[list[int] | None, str]:
+    """Solve the order MILP with HiGHS; returns (order|None, status)."""
+    from scipy.optimize import Bounds, LinearConstraint, milp
+
+    model = build_s2_order_ilp(np.asarray(w_overlap, dtype=float))
+    res = milp(
+        c=model.c,
+        constraints=LinearConstraint(model.a, model.lb, model.ub),
+        integrality=model.integrality,
+        bounds=Bounds(0, 1),
+        options={"time_limit": time_limit, "presolve": True})
+    if res.x is None:
+        return None, "infeasible" if res.status == 2 else "timeout"
+    return model.extract_order(np.round(res.x)), (
+        "optimal" if res.status == 0 else "feasible")

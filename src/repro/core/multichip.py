@@ -28,22 +28,32 @@ on an ICI ring — by letting every layer choose a *sharding mode*:
 Duration accounting (Def 3 extended):
 
     layer duration = max over chips of the shard's full Def-3 duration
-                     + bottleneck-link ICI elements * t_ici
+                     + bottleneck-link ICI elements * t_ici     (serial)
+    layer duration = max(max-over-chips compute, ICI)         (overlap)
 
-ICI transfers are serialised against compute (conservative, predictable —
-the paper's sequential-step spirit) while the ring links themselves run in
-parallel, so an ICI phase costs its *bottleneck link's* element count, in
-the direction of Chen et al.'s communication lower bounds for convolution
-accelerators (arXiv:1911.05662).  Resharding is charged whenever
-consecutive layers pick modes whose activation layouts differ (see
-``_transition_elements``); the mode sequence is chosen by a small
-Viterbi-style dynamic program over (layer, mode) states, so a cheap layer
-never strands the next layer in an expensive layout.
+By default ICI transfers are serialised against compute (conservative,
+predictable — the paper's sequential-step spirit) while the ring links
+themselves run in parallel, so an ICI phase costs its *bottleneck link's*
+element count, in the direction of Chen et al.'s communication lower
+bounds for convolution accelerators (arXiv:1911.05662).  With
+``overlap=True`` the inbound exchange of each stage is double-buffered
+under compute (the Stoutchinin et al. halo-cascade discipline,
+arXiv:1902.01492, and the same double-buffering our Def-3 HBM accounting
+already assumes), so a stage costs ``max(compute, ICI)``; the final
+gather has no compute to hide under and stays serial.  Resharding is
+charged whenever consecutive layers pick modes whose activation layouts
+differ (see ``_transition_elements``); the mode sequence is chosen by a
+small Viterbi-style dynamic program over (layer, mode) states, so a cheap
+layer never strands the next layer in an expensive layout.
+
+Row bands are near-even by default; ``balance_rows=True`` sizes them by
+solved per-chip *duration* (``balanced_row_heights``) so the
+max-over-chips term never exceeds the row-balanced one.
 
 Layout approximations (documented, tested loose): band boundaries between
 consecutive row-sharded layers are assumed aligned (pooling between convs
-redistributes rows on-chip, as in ``core.network_planner``); asymmetric
-shard sizes and 2-D tori are ROADMAP follow-ups.
+redistributes rows on-chip, as in ``core.network_planner``); 2-D tori and
+multi-chip inter-layer VMEM reuse are ROADMAP follow-ups.
 
 ``plan_multichip_network`` wraps :func:`plan_network` so the 1-chip case
 reproduces today's single-chip plans *exactly* (inter-layer reuse
@@ -75,25 +85,100 @@ _INPUT_LAYOUT = "all"
 # Shard geometry
 # --------------------------------------------------------------------- #
 
-def row_shard_specs(spec: ConvSpec, n_chips: int
+def row_shard_specs(spec: ConvSpec, n_chips: int,
+                    heights: Sequence[int] | None = None,
                     ) -> list[tuple[int, tuple[int, int], ConvSpec]]:
     """Split ``spec``'s output rows into contiguous bands, one per chip.
 
     Returns ``(chip, (row0, row1), shard_spec)`` triples; the shard spec
     is the halo-extended sub-convolution of the band (``(rows-1)*s_h +
     h_k`` input rows), so ``shard_spec.h_out == row1 - row0``.  Chips
-    beyond ``h_out`` idle (no triple emitted)."""
+    beyond ``h_out`` idle (no triple emitted).  ``heights`` overrides the
+    default near-even split with explicit per-chip band heights (the
+    duration-balanced partition of :func:`balanced_row_heights`)."""
     n = min(n_chips, spec.h_out)
-    base, extra = divmod(spec.h_out, n)
+    if heights is None:
+        base, extra = divmod(spec.h_out, n)
+        heights = [base + (1 if c < extra else 0) for c in range(n)]
+    elif len(heights) != n or sum(heights) != spec.h_out or \
+            min(heights) < 1:
+        raise ValueError(
+            f"band heights {list(heights)} do not tile {spec.h_out} "
+            f"output rows over {n} chips")
     shards = []
     r0 = 0
-    for c in range(n):
-        rows = base + (1 if c < extra else 0)
+    for c, rows in enumerate(heights):
         h_in_band = (rows - 1) * spec.s_h + spec.h_k
         shards.append((c, (r0, r0 + rows),
                        dataclasses.replace(spec, h_in=h_in_band)))
         r0 += rows
     return shards
+
+
+def band_solve_duration(spec: ConvSpec, rows: int, hw,
+                        max_group: int | None,
+                        solve_kwargs: dict) -> float | None:
+    """Full Def-3 duration of a ``rows``-row band's halo-extended
+    sub-convolution through the LRU-cached solver; None when no feasible
+    strategy exists at that height."""
+    sub = dataclasses.replace(spec, h_in=(rows - 1) * spec.s_h + spec.h_k)
+    p = resolve_group_size(sub, hw, max_group)
+    try:
+        res = solver_mod.solve_cached(sub, p, hw, **solve_kwargs)
+    except ValueError:
+        return None
+    if hw.size_mem is not None and \
+            res.strategy.peak_footprint_elements() > hw.size_mem:
+        return None
+    return res.strategy.full_duration(hw)
+
+
+def balanced_row_heights(spec: ConvSpec, hw, n_chips: int,
+                         max_group: int | None,
+                         solve_kwargs: dict) -> list[int] | None:
+    """Duration-balanced band heights: choose per-chip band heights whose
+    solved max-over-chips duration is minimal, instead of balancing raw
+    row counts.  The per-height duration curve ``d(rows)`` is probed
+    through the shared solver LRU (a binary-search-style scan over the
+    candidate heights around the even split — every band pays the same
+    ``h_k - s_h`` halo rows, so heights far above ``ceil(h_out/n)`` only
+    raise the max), then an exact small DP picks the partition of
+    ``h_out`` rows into ``n`` bands minimising ``max d(height)``.  The
+    even split is always admissible, so the result never exceeds the
+    row-balanced max-over-chips duration (tests/test_multichip_overlap).
+    Returns None when some required height has no feasible strategy."""
+    n = min(n_chips, spec.h_out)
+    base, extra = divmod(spec.h_out, n)
+    r_cap = min(spec.h_out, base + (1 if extra else 0) + 1)
+    d: dict[int, float] = {}
+    for r in range(1, r_cap + 1):
+        dur = band_solve_duration(spec, r, hw, max_group, solve_kwargs)
+        if dur is not None:
+            d[r] = dur
+    inf = float("inf")
+    # best[j][k]: minimal max-duration tiling j rows with k bands
+    best = [[inf] * (n + 1) for _ in range(spec.h_out + 1)]
+    pick = [[0] * (n + 1) for _ in range(spec.h_out + 1)]
+    best[0][0] = 0.0
+    for j in range(1, spec.h_out + 1):
+        for k in range(1, n + 1):
+            for r, dur in d.items():
+                if r > j:
+                    continue
+                v = max(best[j - r][k - 1], dur)
+                if v < best[j][k]:
+                    best[j][k] = v
+                    pick[j][k] = r
+    if best[spec.h_out][n] == inf:
+        return None
+    heights = []
+    j, k = spec.h_out, n
+    while k:
+        r = pick[j][k]
+        heights.append(r)
+        j, k = j - r, k - 1
+    heights.sort(reverse=True)       # widest band on chip 0, like the
+    return heights                   # near-even split's extra-row layout
 
 
 def kernel_shard_specs(spec: ConvSpec, n_chips: int
@@ -207,6 +292,7 @@ class MultiChipLayerPlan:
     ici_elements: int                    # bottleneck-link elements, inbound
     ici_duration: float
     savings: float = 0.0                 # 1-chip path: inter-layer reuse
+    overlap: bool = False                # double-buffered halo exchange
 
     def __post_init__(self):
         if self.duration < -1e-9:
@@ -219,6 +305,12 @@ class MultiChipLayerPlan:
 
     @property
     def duration(self) -> float:
+        """Serialised (paper Def-3 spirit): compute + ICI.  Overlapped
+        (double-buffered halo exchange, Stoutchinin-style): the inbound
+        ICI hides under the stage's compute, max(compute, ICI)."""
+        if self.overlap:
+            return max(self.compute_duration, self.ici_duration) \
+                - self.savings
         return self.compute_duration + self.ici_duration - self.savings
 
 
@@ -237,6 +329,8 @@ class MultiChipPlan:
     planning_seconds: float
     solver_calls: int
     cache_hits: int
+    overlap: bool = False                # ICI hidden under compute
+    balance_rows: bool = False           # duration-balanced band heights
 
     @property
     def n_layers(self) -> int:
@@ -284,10 +378,11 @@ class MultiChipPlan:
         for lp in self.layers:
             per_chip = " ".join(f"c{s.chip}:{s.gross_duration:g}"
                                 for s in lp.shards)
+            combine = ("max overlapped ici" if lp.overlap else "+ ici")
             lines.append(
                 f"  L{lp.index}: {lp.mode:<9} x{lp.active_chips} "
                 f"dur={lp.duration:g} (compute {lp.compute_duration:g}"
-                f" + ici {lp.ici_duration:g}"
+                f" {combine} {lp.ici_duration:g}"
                 f"{f' - reuse {lp.savings:g}' if lp.savings else ''})"
                 f"  [{per_chip}]")
         if self.final_gather_duration:
@@ -320,6 +415,7 @@ class _ModeEval:
 
 def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
                max_group: int | None, solve_kwargs: dict,
+               balance_rows: bool = False,
                ) -> _ModeEval | None:
     """Solve every shard of ``spec`` under ``mode`` through the LRU-cached
     solver; None when any shard fits no strategy family (mode infeasible
@@ -328,8 +424,13 @@ def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
     if mode == "replicate":
         raw = [(0, None, None, spec)]
     elif mode == "row":
+        heights = None
+        if balance_rows:
+            heights = balanced_row_heights(spec, hw, cluster.n_chips,
+                                           max_group, solve_kwargs)
         raw = [(c, band, None, s)
-               for c, band, s in row_shard_specs(spec, cluster.n_chips)]
+               for c, band, s in row_shard_specs(spec, cluster.n_chips,
+                                                 heights)]
     elif mode == "channel":
         raw = [(c, None, krange, s)
                for c, krange, s in kernel_shard_specs(spec, cluster.n_chips)]
@@ -391,6 +492,8 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                            rng_seed: int = 0,
                            modes: Sequence[str] = MODES,
                            include_single_chip_baseline: bool = True,
+                           overlap: bool = False,
+                           balance_rows: bool = False,
                            ) -> MultiChipPlan:
     """Plan a conv network on an ICI ring of ``cluster.n_chips`` chips.
 
@@ -402,6 +505,16 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     dynamic program picks the mode sequence minimising total duration
     including a final gather of the last activation to chip 0.  Raises
     :class:`InfeasibleNetworkError` when some layer fits under no mode.
+
+    ``overlap=True`` prices each layer's inbound ICI as double-buffered
+    against compute — per-layer duration ``max(compute, ICI)`` instead of
+    ``compute + ICI`` (the halo/reshard of stage l streams while stage
+    l-1's band is still computing; only the final gather stays serial).
+    ``balance_rows=True`` sizes row bands by solved per-chip *duration*
+    (:func:`balanced_row_heights`) instead of raw row counts.  Both
+    default to False, which reproduces the serialised row-balanced
+    accounting bit-exactly (the paper's Def-3 spirit; the benchmark's
+    trajectory baseline).
     """
     specs = list(specs)
     if not specs:
@@ -423,7 +536,8 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                     gross_duration=lp.gross_duration),),
                 compute_duration=lp.gross_duration,
                 ici_elements=0, ici_duration=0.0,
-                savings=lp.input_load_saved + lp.write_back_saved)
+                savings=lp.input_load_saved + lp.write_back_saved,
+                overlap=overlap)
             for lp in net.layers)
         return MultiChipPlan(
             name=name, cluster=cluster, layers=layers,
@@ -432,7 +546,8 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
             single_chip_duration=net.total_duration,
             network_plan=net,
             planning_seconds=net.planning_seconds,
-            solver_calls=net.solver_calls, cache_hits=net.cache_hits)
+            solver_calls=net.solver_calls, cache_hits=net.cache_hits,
+            overlap=overlap, balance_rows=balance_rows)
 
     hits0 = calls0 = 0
     info = solver_mod.solve_cached.cache_info()
@@ -444,7 +559,8 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     for i, spec in enumerate(specs):
         layer_evals = {}
         for mode in modes:
-            ev = _eval_mode(spec, mode, cluster, max_group, solve_kwargs)
+            ev = _eval_mode(spec, mode, cluster, max_group, solve_kwargs,
+                            balance_rows=balance_rows)
             if ev is not None:
                 layer_evals[mode] = ev
         if not layer_evals:
@@ -467,18 +583,25 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         # resharding moves the consumer's (post-pooling) input map — the
         # tensor that must land in the consumer's layout.
         a_full = specs[i].num_pixels * specs[i].c_in
+        def stage_cost(compute: float, elems: int) -> float:
+            """Per-layer contribution: serial (Def-3) or overlapped
+            (double-buffered halo exchange hides ICI under compute)."""
+            if overlap:
+                return max(compute, elems * t_ici)
+            return compute + elems * t_ici
+
         for mode, ev in layer_evals.items():
             if i == 0:
                 elems = _transition_elements(
                     _INPUT_LAYOUT, mode, specs[i], a_full, n)
-                nxt_cost[mode] = ev.compute_duration + elems * t_ici
+                nxt_cost[mode] = stage_cost(ev.compute_duration, elems)
                 choices[mode] = (None, elems)
                 continue
             best_prev, best_val, best_elems = None, float("inf"), 0
             for pmode, pcost in cost.items():
                 elems = _transition_elements(
                     evals[i - 1][pmode].layout, mode, specs[i], a_full, n)
-                val = pcost + ev.compute_duration + elems * t_ici
+                val = pcost + stage_cost(ev.compute_duration, elems)
                 if val < best_val:
                     best_prev, best_val, best_elems = pmode, val, elems
             nxt_cost[mode] = best_val
@@ -513,7 +636,8 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
             shards=evals[i][chosen[i]].shards,
             compute_duration=evals[i][chosen[i]].compute_duration,
             ici_elements=in_elems[i],
-            ici_duration=in_elems[i] * t_ici)
+            ici_duration=in_elems[i] * t_ici,
+            overlap=overlap)
         for i in range(len(specs)))
 
     single = None
@@ -534,4 +658,5 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         network_plan=None,
         planning_seconds=planning_seconds,
         solver_calls=(info.hits + info.misses) - calls0,
-        cache_hits=info.hits - hits0)
+        cache_hits=info.hits - hits0,
+        overlap=overlap, balance_rows=balance_rows)

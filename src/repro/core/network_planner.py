@@ -315,7 +315,11 @@ def greedy_feasible_strategy(spec: ConvSpec, p: int,
         if cands:
             return min(cands, key=lambda s: s.objective(hw))
     try:
-        return solver_mod.best_s2_cached(spec, hw).strategy
+        res = solver_mod.best_s2_cached(spec, hw)
+        # the baseline is polish-free by definition: use the enumeration
+        # winner, not the polished/MILP-certified strategy
+        return res.seed_strategy if res.seed_strategy is not None \
+            else res.strategy
     except ValueError as e:
         raise InfeasibleNetworkError(
             f"no S1 or S2 strategy fits size_mem={hw.size_mem} "
@@ -350,79 +354,22 @@ def _resolve_ps(specs: Sequence[ConvSpec], hw: HardwareModel,
 
 
 # --------------------------------------------------------------------- #
-# Front door
+# Plan assembly (strategies -> reuse decisions -> layer schedule)
 # --------------------------------------------------------------------- #
 
-def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
-                 *,
-                 name: str = "network",
-                 p: int | Sequence[int] | None = None,
-                 max_group: int | None = 16,
-                 nb_data_reload: int = 2,
-                 polish_iters: int = 6_000,
-                 polish_restarts: int = 4,
-                 use_milp: bool = False,
-                 time_limit: float = 10.0,
-                 rng_seed: int = 0,
-                 allow_reuse: bool = True,
-                 solve_fn: Callable[..., solver_mod.SolveResult] | None = None,
-                 ) -> NetworkPlan:
-    """Solve every layer and assemble the network schedule.
+def _assemble_layers(specs: Sequence[ConvSpec], ps: Sequence[int],
+                     results: Sequence[solver_mod.SolveResult],
+                     hw: HardwareModel, allow_reuse: bool,
+                     ) -> tuple[list[LayerPlan], float, float]:
+    """Fixed per-layer strategies -> (layers, total, gross total): the
+    inter-layer reuse pass and duration accounting, shared between the
+    first assembly and the reuse-aware refinement candidates.
 
-    Every returned strategy is feasible under ``hw.size_mem`` (S1, shrunk
-    S1, or the S2 kernel-group-swapping fallback — see the module note);
-    :class:`InfeasibleNetworkError` is raised when a layer fits no family.
-    Deterministic for fixed ``rng_seed`` (restart seeds are derived from
-    it; see ``solver.polish_multi``).  ``solve_fn`` overrides the cached
-    solver (tests / custom search)."""
-    specs = list(specs)
-    if not specs:
-        raise ValueError("empty network")
-    ps = _resolve_ps(specs, hw, p, max_group)
-    fn = solve_fn or solver_mod.solve_cached
-
-    hits0 = calls0 = 0
-    if fn is solver_mod.solve_cached:
-        info = solver_mod.solve_cached.cache_info()
-        hits0, calls0 = info.hits, info.hits + info.misses
-
-    t0 = time.perf_counter()
-    results = []
-    for i, (spec, pp) in enumerate(zip(specs, ps)):
-        try:
-            results.append(
-                fn(spec, pp, hw, nb_data_reload=nb_data_reload,
-                   time_limit=time_limit, polish_iters=polish_iters,
-                   use_milp=use_milp, rng_seed=rng_seed,
-                   polish_restarts=polish_restarts))
-        except ValueError as e:
-            raise InfeasibleNetworkError(
-                f"layer {i} ({spec.c_in}x{spec.h_in}x{spec.w_in}"
-                f"->{spec.c_out}): no strategy fits "
-                f"size_mem={hw.size_mem}") from e
-    planning_seconds = time.perf_counter() - t0
-
-    # feasibility validation: never emit a plan whose peak exceeds the
-    # budget (regression guard for custom solve_fn paths too).
-    if hw.size_mem is not None:
-        for i, res in enumerate(results):
-            peak = res.strategy.peak_footprint_elements()
-            if peak > hw.size_mem:
-                raise InfeasibleNetworkError(
-                    f"layer {i}: strategy {res.strategy.name} peak "
-                    f"footprint {peak} exceeds size_mem={hw.size_mem}")
-
-    cache_hits = solver_calls = 0
-    if fn is solver_mod.solve_cached:
-        info = solver_mod.solve_cached.cache_info()
-        cache_hits = info.hits - hits0
-        solver_calls = (info.hits + info.misses) - calls0
-
-    # inter-layer reuse: for every adjacent pair, hold the full activation
-    # on-chip if it fits, else the largest admissible row window.  The
-    # decision is sequential: a middle layer holding its input map (from
-    # the previous pair) has less room for an accumulating output map, so
-    # the producer-side check carries that already-held amount forward.
+    Reuse decision per adjacent pair: hold the full activation on-chip if
+    it fits, else the largest admissible row window.  The decision is
+    sequential: a middle layer holding its input map (from the previous
+    pair) has less room for an accumulating output map, so the
+    producer-side check carries that already-held amount forward."""
     # reuse_after[i]: ("full", 0) | ("window", rows) | None   for i -> i+1
     reuse_after: list[tuple[str, int] | None] = []
     for i in range(len(specs) - 1):
@@ -477,6 +424,119 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
         layers.append(lp)
         total += lp.duration
         gross_total += gross
+    return layers, total, gross_total
+
+
+# --------------------------------------------------------------------- #
+# Front door
+# --------------------------------------------------------------------- #
+
+def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
+                 *,
+                 name: str = "network",
+                 p: int | Sequence[int] | None = None,
+                 max_group: int | None = 16,
+                 nb_data_reload: int = 2,
+                 polish_iters: int = 6_000,
+                 polish_restarts: int = 4,
+                 use_milp: bool = False,
+                 time_limit: float = 10.0,
+                 rng_seed: int = 0,
+                 allow_reuse: bool = True,
+                 solve_fn: Callable[..., solver_mod.SolveResult] | None = None,
+                 ) -> NetworkPlan:
+    """Solve every layer and assemble the network schedule.
+
+    Every returned strategy is feasible under ``hw.size_mem`` (S1, shrunk
+    S1, or the S2 kernel-group-swapping fallback — see the module note);
+    :class:`InfeasibleNetworkError` is raised when a layer fits no family.
+    Deterministic for fixed ``rng_seed`` (restart seeds are derived from
+    it; see ``solver.polish_multi``).  ``solve_fn`` overrides the cached
+    solver (tests / custom search)."""
+    specs = list(specs)
+    if not specs:
+        raise ValueError("empty network")
+    ps = _resolve_ps(specs, hw, p, max_group)
+    fn = solve_fn or solver_mod.solve_cached
+
+    hits0 = calls0 = 0
+    if fn is solver_mod.solve_cached:
+        info = solver_mod.solve_cached.cache_info()
+        hits0, calls0 = info.hits, info.hits + info.misses
+
+    t0 = time.perf_counter()
+    results = []
+    for i, (spec, pp) in enumerate(zip(specs, ps)):
+        try:
+            results.append(
+                fn(spec, pp, hw, nb_data_reload=nb_data_reload,
+                   time_limit=time_limit, polish_iters=polish_iters,
+                   use_milp=use_milp, rng_seed=rng_seed,
+                   polish_restarts=polish_restarts))
+        except ValueError as e:
+            raise InfeasibleNetworkError(
+                f"layer {i} ({spec.c_in}x{spec.h_in}x{spec.w_in}"
+                f"->{spec.c_out}): no strategy fits "
+                f"size_mem={hw.size_mem}") from e
+    # feasibility validation: never emit a plan whose peak exceeds the
+    # budget (regression guard for custom solve_fn paths too).
+    if hw.size_mem is not None:
+        for i, res in enumerate(results):
+            peak = res.strategy.peak_footprint_elements()
+            if peak > hw.size_mem:
+                raise InfeasibleNetworkError(
+                    f"layer {i}: strategy {res.strategy.name} peak "
+                    f"footprint {peak} exceeds size_mem={hw.size_mem}")
+
+    layers, total, gross_total = _assemble_layers(
+        specs, ps, results, hw, allow_reuse)
+
+    # reuse-aware refinement: the per-layer joint (p, strategy) search can
+    # pick a cheaper-gross strategy whose larger footprint blocks an
+    # inter-layer reuse worth more than the layer-level gain.  For every
+    # pair that got no full residency, re-solve the consumer under a
+    # budget tightened to leave room for (a) the full held input map and
+    # (b) one minimal halo window, and keep whichever full assembly is
+    # cheaper (each capped solve hits the same LRU).
+    if allow_reuse and hw.size_mem is not None and fn is \
+            solver_mod.solve_cached:
+        for i in range(1, len(specs)):
+            if layers[i].reuse_input:
+                continue
+            caps = []
+            if not layers[i].window_rows:
+                caps.append(hw.size_mem
+                            - specs[i].h_k * specs[i].w_in * specs[i].c_in)
+            caps.append(hw.size_mem - _held_elements(specs[i - 1],
+                                                     specs[i]))
+            peak_i = results[i].strategy.peak_footprint_elements()
+            for cap in sorted(set(caps), reverse=True):
+                if cap <= 0 or peak_i <= cap:
+                    continue
+                capped_hw = dataclasses.replace(hw, size_mem=cap)
+                try:
+                    alt = fn(specs[i], ps[i], capped_hw,
+                             nb_data_reload=nb_data_reload,
+                             time_limit=time_limit,
+                             polish_iters=polish_iters,
+                             use_milp=use_milp, rng_seed=rng_seed,
+                             polish_restarts=polish_restarts)
+                except ValueError:
+                    continue
+                alt_results = list(results)
+                alt_results[i] = alt
+                alt_layers, alt_total, alt_gross = _assemble_layers(
+                    specs, ps, alt_results, hw, allow_reuse)
+                if alt_total < total:
+                    results, layers = alt_results, alt_layers
+                    total, gross_total = alt_total, alt_gross
+    planning_seconds = time.perf_counter() - t0
+
+    cache_hits = solver_calls = 0
+    if fn is solver_mod.solve_cached:
+        info = solver_mod.solve_cached.cache_info()
+        cache_hits = info.hits - hits0
+        solver_calls = (info.hits + info.misses) - calls0
 
     baseline = greedy_network_duration(specs, hw, p=p, max_group=max_group)
     return NetworkPlan(

@@ -427,8 +427,9 @@ def s1_max_feasible_p(spec: ConvSpec, p: int, hw: HardwareModel) -> int | None:
 @functools.lru_cache(maxsize=256)
 def best_s2_cached(spec: ConvSpec, hw: HardwareModel) -> s2_mod.S2Result:
     """LRU-cached ``best_s2`` — the planner and the greedy baseline share
-    one S2 search per (spec, hw).  Raises ValueError when even S2 cannot
-    fit ``hw.size_mem``."""
+    one S2 search (seed enumeration + joint polish + tiny-grid order
+    MILP) per (spec, hw).  Raises ValueError when even S2 cannot fit
+    ``hw.size_mem``."""
     return s2_mod.best_s2(spec, hw)
 
 
@@ -438,9 +439,10 @@ def _s2_fallback_result(spec: ConvSpec, hw: HardwareModel) -> SolveResult:
         strategy=res.strategy,
         objective=res.objective,
         lower_bound=s2_mod.s2_lower_bound(spec, hw),
-        seed_objective=res.objective,   # best_s2 has no polish stage
+        seed_objective=(res.seed_objective if res.seed_objective is not None
+                        else res.objective),
         milp_status="s2_fallback",
-        milp_objective=None,
+        milp_objective=res.milp_objective,
         polish_objective=res.objective,
         reload_ok=True,
         mode="s2")
@@ -450,6 +452,31 @@ def _s2_fallback_result(spec: ConvSpec, hw: HardwareModel) -> SolveResult:
 # Solve cache — repeated layers (ResNet stages) are solved once.
 # All key components are frozen dataclasses, hence hashable.
 # --------------------------------------------------------------------- #
+
+def _s1_seed_full_duration(spec: ConvSpec, q: int, hw: HardwareModel,
+                           ) -> float:
+    """Cheapest budget-feasible heuristic seed at group size ``q`` under
+    full Def-3 accounting (inf when none fits) — the O(num_patches)
+    probe the joint (p, strategy) search scans before paying a solve."""
+    best = float("inf")
+    for builder in (zigzag, row_by_row):
+        cand = builder(spec, q)
+        if hw.size_mem is not None and \
+                cand.peak_footprint_elements() > hw.size_mem:
+            continue
+        best = min(best, cand.full_duration(hw))
+    return best
+
+
+def _s2_can_beat(spec: ConvSpec, hw: HardwareModel, target: float) -> bool:
+    """Analytic precheck: can ANY S2 strategy undercut ``target`` under
+    full Def-3 accounting?  S2 writes back (patch, kernel) cells, so its
+    duration is bounded below by ``s2_lower_bound`` plus the cell-granular
+    write-back — skipping the search when the bound already loses keeps
+    the joint search free on layers where S1 dominates."""
+    wb = spec.num_patches * spec.c_out * hw.t_w
+    return s2_mod.s2_lower_bound(spec, hw) + wb < target
+
 
 @functools.lru_cache(maxsize=256)
 def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
@@ -464,12 +491,18 @@ def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
     their fallback once.  ``hw.size_mem`` participates in the key via the
     frozen ``HardwareModel``.
 
-    Selection rule: the largest S1 group size that fits the budget is
-    solved; when the budget forced the group below the PE-optimal ``p``
-    (or no S1 fits at all), the S2 kernel-group-swapping alternative is
-    priced with the same full Def-3 accounting and the cheaper wins.
-    ``solve_cached.cache_info()`` exposes the hit counters the network
-    planner reports."""
+    Selection rule — the joint (p, strategy) search under eq. 12: the
+    largest S1 group size that fits the budget is solved; smaller group
+    sizes are probed with cheap heuristic seeds and re-solved only when a
+    probe undercuts the incumbent; and the S2 kernel-group-swapping
+    alternative (seed + polish + tiny-grid MILP) is priced with the same
+    full Def-3 accounting whenever its analytic lower bound could win.
+    The cheapest feasible candidate is returned, so the result never
+    loses to either single-endpoint policy (S1-at-max-p or S2-only) —
+    see tests/test_s2_polish.py.  With ``size_mem=None`` (the paper's
+    Sec-7.1 setting) the behaviour is unchanged: S1 at the requested
+    group size.  ``solve_cached.cache_info()`` exposes the hit counters
+    the network planner reports."""
     p_fit = s1_max_feasible_p(spec, p, hw)
     if p_fit is None:
         return _s2_fallback_result(spec, hw)
@@ -477,16 +510,38 @@ def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
                 time_limit=time_limit, polish_iters=polish_iters,
                 use_milp=use_milp, rng_seed=rng_seed,
                 polish_restarts=polish_restarts)
-    if hw.size_mem is not None:
-        if res.strategy.peak_footprint_elements() > hw.size_mem:
-            return _s2_fallback_result(spec, hw)
-        if p_fit < p:
-            # budget-constrained S1: price the S2 alternative too
-            try:
-                s2_res = _s2_fallback_result(spec, hw)
-            except ValueError:
-                return res
-            if s2_res.strategy.full_duration(hw) < \
-                    res.strategy.full_duration(hw):
-                return s2_res
-    return res
+    if hw.size_mem is None:
+        return res
+    if res.strategy.peak_footprint_elements() > hw.size_mem:
+        return _s2_fallback_result(spec, hw)
+
+    best = res
+    best_full = res.strategy.full_duration(hw)
+
+    # (p) dimension: probe smaller group sizes with heuristic seeds; only
+    # a probe that already beats the solved incumbent earns a full solve.
+    probes = sorted({q for q in (p_fit // 2, p_fit // 4, 1)
+                     if 1 <= q < p_fit})
+    for q in probes:
+        if _s1_seed_full_duration(spec, q, hw) >= best_full:
+            continue
+        cand = solve(spec, q, hw, nb_data_reload=nb_data_reload,
+                     time_limit=time_limit, polish_iters=polish_iters,
+                     use_milp=use_milp, rng_seed=rng_seed,
+                     polish_restarts=polish_restarts)
+        cand_full = cand.strategy.full_duration(hw)
+        if cand.strategy.peak_footprint_elements() <= hw.size_mem and \
+                cand_full < best_full:
+            best, best_full = cand, cand_full
+
+    # (strategy) dimension: the S2 alternative, searched whenever its
+    # analytic bound could undercut the incumbent (always when the budget
+    # shrank the S1 group — the historical comparison point).
+    if p_fit < p or _s2_can_beat(spec, hw, best_full):
+        try:
+            s2_res = _s2_fallback_result(spec, hw)
+        except ValueError:
+            return best
+        if s2_res.strategy.full_duration(hw) < best_full:
+            best = s2_res
+    return best

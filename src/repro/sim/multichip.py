@@ -15,9 +15,12 @@ reconciliation discipline matches ``sim.network``:
     per-layer outputs equal the full reference convolution with no gaps;
   * ``accounting_exact`` — every shard's measured Def-3 duration equals
     the plan's ``gross_duration`` for that shard, every layer's
-    ``compute_duration`` equals the max over its shards, and the plan's
+    ``compute_duration`` equals the max over its shards, the plan's
     per-layer ICI charges equal an independent re-pricing of the chosen
-    mode sequence (``core.multichip.ici_schedule``);
+    mode sequence (``core.multichip.ici_schedule``), and the total
+    recomposes from the *measured* shard durations under the plan's
+    discipline — ``max(compute, ICI)`` per stage when ``plan.overlap``,
+    ``compute + ICI`` otherwise;
   * ``peak_within_budget`` — every shard's *measured* peak stays within
     the per-chip ``size_mem``;
   * ICI transfers themselves are analytic (the bottleneck-link element
@@ -78,14 +81,24 @@ class MultiChipSimReport:
     @property
     def accounting_exact(self) -> bool:
         """Per-shard sim == plan gross, per-layer compute == max shard,
-        and the plan's ICI charges match an independent re-pricing."""
+        the plan's ICI charges match an independent re-pricing, and the
+        total recomposes from *measured* shard durations under the plan's
+        overlap discipline (``max(compute, ICI)`` per stage when
+        ``plan.overlap``, ``compute + ICI`` otherwise)."""
+        total = self.plan.final_gather_duration
         for reps, lp in zip(self.shard_reports, self.plan.layers):
             for r, shard in zip(reps, lp.shards):
                 if abs(r.total_duration - shard.gross_duration) > 1e-9:
                     return False
-            if abs(max(r.total_duration for r in reps)
-                   - lp.compute_duration) > 1e-9:
+            compute = max(r.total_duration for r in reps)
+            if abs(compute - lp.compute_duration) > 1e-9:
                 return False
+            if self.plan.overlap:
+                total += max(compute, lp.ici_duration) - lp.savings
+            else:
+                total += compute + lp.ici_duration - lp.savings
+        if abs(total - self.plan.total_duration) > 1e-6:
+            return False
         per_layer, final = ici_schedule(
             [lp.spec for lp in self.plan.layers],
             [lp.mode for lp in self.plan.layers],

@@ -12,10 +12,11 @@ import os
 
 import pytest
 
-from repro.core import solver
+from repro.core import solver, strategies_s2
 
 _MAX_ITERS = 1_500
 _MAX_RESTARTS = 2
+_MAX_S2_ITERS = 400
 
 
 @pytest.fixture(autouse=True)
@@ -50,6 +51,9 @@ def _fast_polish(monkeypatch):
 
     monkeypatch.setattr(solver, "solve", capped_solve)
     monkeypatch.setattr(solver, "polish", capped_polish)
+    monkeypatch.setattr(
+        strategies_s2, "DEFAULT_POLISH_ITERS",
+        min(strategies_s2.DEFAULT_POLISH_ITERS, _MAX_S2_ITERS))
     yield
 
 

@@ -160,8 +160,10 @@ def test_savings_clamped_and_durations_nonnegative():
 
 def test_row_window_cascade_partial_savings():
     """When the full activation does not fit, a halo-extended row window
-    is held instead: partial first-load savings, no write-back savings."""
-    hw = HardwareModel(nbop_pe=10 ** 9, size_mem=2400)
+    is held instead: partial first-load savings, no write-back savings.
+    (Budget chosen for the joint (p, strategy) planner: at tighter budgets
+    it now prefers a cheaper larger-footprint S2 schedule over windowing.)"""
+    hw = HardwareModel(nbop_pe=10 ** 9, size_mem=4400)
     plan = plan_network(lenet5.LAYERS, hw, **FAST)
     windowed = [lp for lp in plan.layers if lp.window_rows]
     assert windowed, "expected a row-window cascade at this budget"
@@ -231,6 +233,31 @@ def test_row_window_rows_fit_condition():
         nbop_pe=10 ** 9,
         size_mem=base + (spec.h_k - 1) * spec.w_in * spec.c_in)
     assert row_window_rows(spec, strat, spec, strat, barely) == 0
+
+
+def test_reuse_aware_refinement_never_loses_to_raw_assembly():
+    """The reuse-aware refinement (re-solving a consumer under a
+    tightened cap to unblock inter-layer reuse) must only ever lower the
+    total: plan_network's result is <= the assembly of the raw per-layer
+    joint-search results."""
+    from repro.core.network_planner import _assemble_layers, _resolve_ps
+
+    for specs, size_mem in ((lenet5.LAYERS, 2400), (tight.LAYERS, 9216)):
+        hw = HardwareModel(nbop_pe=10 ** 9, size_mem=size_mem)
+        solver.solve_cached.cache_clear()
+        solver.best_s2_cached.cache_clear()
+        plan = plan_network(specs, hw, **FAST)
+        ps = _resolve_ps(specs, hw, None, 16)
+        raw = [solver.solve_cached(s, pp, hw, time_limit=10.0,
+                                   use_milp=False, polish_iters=800,
+                                   polish_restarts=2)
+               for s, pp in zip(specs, ps)]
+        _, raw_total, _ = _assemble_layers(specs, ps, raw, hw, True)
+        assert plan.total_duration <= raw_total + 1e-9
+        # refined plans stay feasible
+        for lp in plan.layers:
+            assert lp.strategy.peak_footprint_elements() <= size_mem
+            assert lp.duration >= 0
 
 
 def test_resolve_group_size_respects_pe_and_cap():
