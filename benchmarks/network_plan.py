@@ -10,11 +10,15 @@ over a (size_mem x network) grid showing the S1→S2 crossover: budgets
 below the largest layer's kernel set force the kernel-group-swapping
 fallback, and the plan must stay feasible and keep beating greedy.
 ``--sweep-chips`` adds the multi-chip scaling curve: each network is
-planned on 1/2/4/8-chip ICI rings (``core.multichip``) at the tight
+planned on 1/2/4/8-chip clusters (``core.multichip``) at the tight
 budget where sharding matters (half the largest kernel set), recording —
 for both the serialised PR-3 accounting and the overlap + duration-
 balanced model — the chosen mode string, ICI fraction, and speedup over
-the 1-chip plan.
+the 1-chip plan.  ``--topology`` adds a topology axis to that sweep:
+the unidirectional ``ring`` baseline (bit-exact PR-3/PR-4 numbers),
+``biring``, and bidirectional 2-D tori (``torus2x2``/``torus2x4``/... or
+``torus`` for auto-dims) whose halved bottleneck hops and hybrid
+row x channel sharding move the 4/8-chip points.
 
 ``--profile`` emits per-stage planner wall-clock and solver-LRU hit
 rates (stable keys ``planner_seconds`` / ``gain_vs_pr3`` against the
@@ -32,6 +36,7 @@ it untouched so degraded numbers never clobber the trajectory.
         [--networks lenet5 resnet8 tight4] [--size-mem N] \
         [--sweep-mem auto | --sweep-mem 2000 8000 ...] \
         [--sweep-chips auto | --sweep-chips 1 2 4 ...] \
+        [--topology ring biring torus2x2 ...] \
         [--restarts 4] [--iters 6000] [--fast] [--profile] \
         [--max-planner-seconds S] \
         [--out benchmarks/results/network_plan.json] \
@@ -48,11 +53,11 @@ import os
 import sys
 import time
 
-from repro.configs.clusters import make_cluster
+from repro.configs.clusters import make_cluster, torus_dims
 from repro.configs.networks import NETWORKS
 from repro.configs.tight import budget_points
 from repro.core import solver
-from repro.core.cost_model import HardwareModel
+from repro.core.cost_model import HardwareModel, Topology
 from repro.core.multichip import plan_multichip_network
 from repro.core.network_planner import InfeasibleNetworkError, plan_network
 
@@ -189,54 +194,82 @@ def sweep_tight_memory(name: str, budgets: list[int], *, nbop_pe: int,
     return {"network": name, "points": rows}
 
 
-def sweep_chip_counts(name: str, chip_counts: list[int], *, nbop_pe: int,
+def _resolve_topology(topology: str, n_chips: int) -> str | None:
+    """Concrete topology label for a sweep point, or None when the
+    combination does not exist (torus needs a 2-D grid of exactly
+    ``n_chips``).  One chip has no links, so every wiring resolves to
+    the same ``ring`` baseline point there (deduped by the caller)."""
+    if n_chips == 1:
+        return "ring"
+    if topology in ("ring", "biring"):
+        return topology
+    if topology == "torus":                # auto: squarest grid
+        dims = torus_dims(n_chips)
+        return None if dims is None else f"torus{dims[0]}x{dims[1]}"
+    ny, nx = Topology.parse(topology).dims
+    return topology if ny * nx == n_chips else None
+
+
+def sweep_chip_counts(name: str, chip_counts: list[int],
+                      topologies: list[str], *, nbop_pe: int,
                       iters: int, restarts: int, rng_seed: int) -> dict:
-    """Plan ``name`` on ICI rings of each chip count at the tight budget
+    """Plan ``name`` on each (chip count x topology) at the tight budget
     (half the largest kernel set Λ — the regime where sharding either
-    restores S1 feasibility or loses to resharding ICI traffic).  Every
-    point is planned twice: with the serialised PR-3 accounting
+    restores S1 feasibility or loses to resharding ICI traffic).
+    Topologies: ``ring`` (PR-3 unidirectional baseline), ``biring``,
+    ``torusRxC`` or ``torus`` (auto-dims: 2x2 at 4 chips, 2x4 at 8).
+    Every point is planned twice: with the serialised PR-3 accounting
     (``overlap=False``) and with overlap + duration-balanced bands — the
-    LRU-shared shard solves make the second plan nearly free."""
+    LRU-shared shard solves make the later plans nearly free (shard
+    sub-convolutions are identical across topologies)."""
     specs = NETWORKS[name]
     size_mem = max(s.kernel_elements for s in specs) // 2
     rows = []
     single = None
     for n_chips in chip_counts:
-        cluster = make_cluster(n_chips, nbop_pe=nbop_pe, size_mem=size_mem)
-        t0 = time.perf_counter()
-        try:
-            ser = plan_multichip_network(
-                specs, cluster, name=name, polish_iters=iters,
-                polish_restarts=restarts, rng_seed=rng_seed,
-                include_single_chip_baseline=False)
-            plan = plan_multichip_network(
-                specs, cluster, name=name, polish_iters=iters,
-                polish_restarts=restarts, rng_seed=rng_seed,
-                include_single_chip_baseline=False,
-                overlap=True, balance_rows=True)
-        except InfeasibleNetworkError as e:
-            rows.append({"n_chips": n_chips, "feasible": False,
-                         "error": str(e)})
-            continue
-        wall = time.perf_counter() - t0
-        if n_chips == 1:
-            single = plan.total_duration
-        rows.append({
-            "n_chips": n_chips,
-            "feasible": True,
-            "total_duration": plan.total_duration,
-            "serialized_duration": ser.total_duration,
-            "modes": plan.mode_string,
-            "serialized_modes": ser.mode_string,
-            "n_sharded_layers": plan.n_sharded_layers,
-            "ici_fraction": round(plan.ici_fraction, 4),
-            "peak_footprint": plan.peak_footprint,
-            "planning_wall_s": round(wall, 4),
-            "speedup_vs_1chip": (round(single / plan.total_duration, 4)
-                                 if single else None),
-            "gain_vs_pr3": _gain_vs_pr3("chip_sweep", (name, n_chips),
-                                        plan.total_duration),
-        })
+        seen: set[str] = set()
+        for topology in topologies:
+            label = _resolve_topology(topology, n_chips)
+            if label is None or label in seen:
+                continue            # e.g. '--topology torus torus2x2'
+            seen.add(label)         # resolves to one 4-chip point
+            cluster = make_cluster(n_chips, nbop_pe=nbop_pe,
+                                   size_mem=size_mem, topology=label)
+            t0 = time.perf_counter()
+            try:
+                ser = plan_multichip_network(
+                    specs, cluster, name=name, polish_iters=iters,
+                    polish_restarts=restarts, rng_seed=rng_seed,
+                    include_single_chip_baseline=False)
+                plan = plan_multichip_network(
+                    specs, cluster, name=name, polish_iters=iters,
+                    polish_restarts=restarts, rng_seed=rng_seed,
+                    include_single_chip_baseline=False,
+                    overlap=True, balance_rows=True)
+            except InfeasibleNetworkError as e:
+                rows.append({"n_chips": n_chips, "topology": label,
+                             "feasible": False, "error": str(e)})
+                continue
+            wall = time.perf_counter() - t0
+            if n_chips == 1 and single is None:
+                single = plan.total_duration
+            rows.append({
+                "n_chips": n_chips,
+                "topology": label,
+                "feasible": True,
+                "total_duration": plan.total_duration,
+                "serialized_duration": ser.total_duration,
+                "modes": plan.mode_string,
+                "serialized_modes": ser.mode_string,
+                "n_sharded_layers": plan.n_sharded_layers,
+                "ici_fraction": round(plan.ici_fraction, 4),
+                "peak_footprint": plan.peak_footprint,
+                "planning_wall_s": round(wall, 4),
+                "speedup_vs_1chip": (round(single / plan.total_duration, 4)
+                                     if single else None),
+                "gain_vs_pr3": _gain_vs_pr3("chip_sweep", (name, n_chips),
+                                            plan.total_duration),
+            })
     return {"network": name, "size_mem": size_mem,
             "t_ici": make_cluster(1, nbop_pe=nbop_pe).t_ici,
             "points": rows}
@@ -273,7 +306,9 @@ def write_bench_summary(path: str, rows: list[dict],
         "chip_sweep": [
             {"network": sw["network"], "size_mem": sw["size_mem"],
              "points": [
-                 {"n_chips": p["n_chips"], "feasible": p["feasible"],
+                 {"n_chips": p["n_chips"],
+                  "topology": p.get("topology", "ring"),
+                  "feasible": p["feasible"],
                   **({"total_duration": p["total_duration"],
                       "serialized_duration": p["serialized_duration"],
                       "modes": p["modes"],
@@ -304,6 +339,11 @@ def main(argv=None) -> int:
     ap.add_argument("--sweep-chips", nargs="+", default=None,
                     help="chip counts for the multi-chip scaling sweep: "
                          "explicit counts, or 'auto' for 1 2 4 8")
+    ap.add_argument("--topology", nargs="+", default=None,
+                    help="topologies for the chip sweep: 'ring' (PR-3 "
+                         "unidirectional baseline), 'biring', 'torusRxC', "
+                         "or 'torus' (auto-dims per chip count); default "
+                         "'ring torus'")
     ap.add_argument("--nbop-pe", type=int, default=10 ** 9)
     ap.add_argument("--iters", type=int, default=6000)
     ap.add_argument("--restarts", type=int, default=4)
@@ -336,6 +376,13 @@ def main(argv=None) -> int:
         args.sweep_chips = args.sweep_chips or ["1", "2", "4"]
     if args.sweep_chips == ["auto"]:
         args.sweep_chips = ["1", "2", "4", "8"]
+    topologies = args.topology or ["ring", "torus"]
+    for t in topologies:
+        if t != "torus":                   # 'torus' = auto-dims
+            try:
+                Topology.parse(t)
+            except ValueError as e:
+                ap.error(f"--topology: {e}")
     networks = args.networks or sorted(NETWORKS)
 
     hw = HardwareModel(nbop_pe=args.nbop_pe, size_mem=args.size_mem)
@@ -361,10 +408,19 @@ def main(argv=None) -> int:
     chip_sweeps = []
     if args.sweep_chips:
         counts = sorted({int(c) for c in args.sweep_chips})
+        for t in topologies:               # a torus matching no swept
+            if t.startswith("torus") and not any(   # count (beyond the
+                    _resolve_topology(t, n)          # shared n=1 ring
+                    for n in counts if n > 1):       # baseline) is a
+                print(f"[network_plan] --topology {t} matches no "  # typo,
+                      f"--sweep-chips count in {counts}",  # not an empty
+                      file=sys.stderr)                     # sweep
+                return 2
         for n in networks:
             chip_sweeps.append(sweep_chip_counts(
-                n, counts, nbop_pe=args.nbop_pe, iters=args.iters,
-                restarts=args.restarts, rng_seed=args.rng_seed))
+                n, counts, topologies, nbop_pe=args.nbop_pe,
+                iters=args.iters, restarts=args.restarts,
+                rng_seed=args.rng_seed))
     t_end = time.perf_counter()
 
     total_wall = t_end - t_start
@@ -423,12 +479,12 @@ def main(argv=None) -> int:
     for sw in chip_sweeps:
         for pt in sw["points"]:
             if not pt["feasible"]:
-                print(f"[chips] {sw['network']} n={pt['n_chips']}: "
-                      f"infeasible")
+                print(f"[chips] {sw['network']} n={pt['n_chips']} "
+                      f"{pt['topology']}: infeasible")
                 continue
             sp = pt["speedup_vs_1chip"]
             print(f"[chips] {sw['network']} mem={sw['size_mem']} "
-                  f"n={pt['n_chips']}: [{pt['modes']}] "
+                  f"n={pt['n_chips']} {pt['topology']}: [{pt['modes']}] "
                   f"dur {pt['total_duration']:g} "
                   f"(serialized {pt['serialized_duration']:g}, "
                   f"ici {pt['ici_fraction']:.1%}"

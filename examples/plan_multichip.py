@@ -6,12 +6,15 @@ flip from the single-chip replicate path to row/channel sharding, paying
 ICI for halo exchanges, input broadcasts, and resharding.
 
     PYTHONPATH=src python examples/plan_multichip.py [network] \
-        [--chips 4] [--size-mem N] [--ici-factor 4]
-    PYTHONPATH=src python examples/plan_multichip.py tight4 --crossover
+        [--chips 4] [--size-mem N] [--ici-factor 4] \
+        [--topology ring|biring|torusRxC]
+    PYTHONPATH=src python examples/plan_multichip.py tight4 --crossover \
+        --topology torus2x2
 """
 import argparse
 
 from repro.configs.clusters import ICI_FACTOR, make_cluster
+from repro.core.cost_model import Topology
 from repro.configs.networks import NETWORKS
 from repro.configs.tight import budget_points
 from repro.core.multichip import plan_multichip_network
@@ -22,10 +25,10 @@ FAST = dict(polish_iters=2000, polish_restarts=2)
 
 
 def run_once(name: str, n_chips: int, size_mem: int | None,
-             nbop_pe: int, ici_factor: float,
+             nbop_pe: int, ici_factor: float, topology: str = "ring",
              overlap: bool = False, balance_rows: bool = False) -> None:
     cluster = make_cluster(n_chips, nbop_pe=nbop_pe, size_mem=size_mem,
-                           ici_factor=ici_factor)
+                           ici_factor=ici_factor, topology=topology)
     plan = plan_multichip_network(NETWORKS[name], cluster, name=name,
                                   overlap=overlap,
                                   balance_rows=balance_rows, **FAST)
@@ -40,21 +43,32 @@ def run_once(name: str, n_chips: int, size_mem: int | None,
 
 
 def crossover(name: str, nbop_pe: int, ici_factor: float,
+              topology: str = "ring",
               overlap: bool = False, balance_rows: bool = False) -> None:
     """Budgets shrink top-to-bottom, chips grow left-to-right: watch the
     mode string flip from all-replicate to row (W) / channel (K) shards
     exactly where sharding buys back S1 feasibility."""
+    Topology.parse(topology)        # reject typos before the sweep —
+    # inside the loop only dims-vs-chip-count mismatches may pass as n/a
     specs = NETWORKS[name]
     budgets = budget_points(specs, fractions=(4.0, 2.0, 1.0, 0.5, 0.25))
     print(f"{name}: replicate→shard crossover "
           f"(largest Λ = {max(s.kernel_elements for s in specs)} elements, "
-          f"t_ici = {ici_factor:g} * t_l)")
+          f"t_ici = {ici_factor:g} * t_l, topology = {topology})")
     for size_mem in sorted(budgets, reverse=True):
         cells = []
         for n_chips in (1, 2, 4, 8):
-            cluster = make_cluster(n_chips, nbop_pe=nbop_pe,
-                                   size_mem=size_mem,
-                                   ici_factor=ici_factor)
+            # one chip has no links: every wiring shares the ring
+            # baseline column (same rule as the benchmark sweep)
+            topo = "ring" if n_chips == 1 else topology
+            try:
+                cluster = make_cluster(n_chips, nbop_pe=nbop_pe,
+                                       size_mem=size_mem,
+                                       ici_factor=ici_factor,
+                                       topology=topo)
+            except ValueError:           # torus dims don't tile n_chips
+                cells.append(f"n{n_chips}: n/a")
+                continue
             try:
                 plan = plan_multichip_network(
                     specs, cluster, name=name, polish_iters=800,
@@ -80,6 +94,10 @@ def main() -> None:
     ap.add_argument("--nbop-pe", type=int, default=10 ** 9)
     ap.add_argument("--ici-factor", type=float, default=ICI_FACTOR,
                     help="t_ici as a multiple of t_l")
+    ap.add_argument("--topology", default="ring",
+                    help="ICI wiring: ring (unidirectional, default), "
+                         "biring, or torusRxC (bidirectional links; "
+                         "enables hybrid row x channel sharding)")
     ap.add_argument("--crossover", action="store_true",
                     help="sweep (budget x chip count) and show the mode "
                          "string at each point")
@@ -93,15 +111,16 @@ def main() -> None:
 
     if args.crossover:
         crossover(args.network, args.nbop_pe, args.ici_factor,
-                  overlap=args.overlap, balance_rows=args.balance_rows)
+                  topology=args.topology, overlap=args.overlap,
+                  balance_rows=args.balance_rows)
         return
     size_mem = args.size_mem
     if size_mem is None:
         specs = NETWORKS[args.network]
         size_mem = max(s.kernel_elements for s in specs) // 2
     run_once(args.network, args.chips, size_mem, args.nbop_pe,
-             args.ici_factor, overlap=args.overlap,
-             balance_rows=args.balance_rows)
+             args.ici_factor, topology=args.topology,
+             overlap=args.overlap, balance_rows=args.balance_rows)
 
 
 if __name__ == "__main__":

@@ -16,6 +16,8 @@ uses element counts.
 from __future__ import annotations
 
 import dataclasses
+import math
+import re
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,19 +46,197 @@ class HardwareModel:
 # inter-chip interconnect, sitting next to ``t_l``/``t_w``.
 # ---------------------------------------------------------------------------
 
+_TORUS_RE = re.compile(r"^torus(\d+)x(\d+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """ICI wiring of a cluster, with per-topology collective pricing.
+
+    ``kind`` is ``'ring'`` (1-D) or ``'torus'`` (2-D, ``dims=(rows,
+    cols)`` rings along each axis — axis 0 is the *row-band* axis, axis 1
+    the *kernel-channel* axis of ``core.multichip``'s hybrid sharding).
+    ``bidirectional`` links carry traffic both ways, halving the
+    bottleneck-link load of every split-table collective (the standard
+    bidirectional-ring algorithm); a halo *shift* moves one boundary's
+    rows one hop, so it costs the same either way.
+
+    Every collective method returns the **bottleneck-link element
+    count** of the phase — multiply by ``ClusterModel.t_ici`` for cycles.
+    Links transfer in parallel; chips do not overlap ICI with compute
+    unless the planner's ``overlap`` discipline says so.  2-D collectives
+    run their two axis phases serially (axis 1 first, rows in parallel;
+    then axis 0) — the conservative, predictable schedule in the spirit
+    of the paper's Def 3.  A ``1xN`` (or ``Nx1``) torus therefore prices
+    every collective exactly like the ``N``-ring with the same link
+    direction — property-tested in ``tests/test_topology*.py``.
+
+    The formulas follow the communication-lower-bound accounting of Chen
+    et al. (arXiv:1911.05662): an all-gather / gather / scatter /
+    reduce-scatter of ``A`` elements over a ``k``-ring keeps one link
+    busy with ``ceil(A*(k-1)/k)`` elements; a pipelined broadcast pushes
+    the full ``A`` through the source's link.
+    """
+
+    kind: str = "ring"                  # 'ring' | 'torus'
+    dims: tuple[int, int] | None = None  # torus only: (rows, cols)
+    bidirectional: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("ring", "torus"):
+            raise ValueError(f"unknown topology kind {self.kind!r}")
+        if self.kind == "torus":
+            if (self.dims is None or len(self.dims) != 2
+                    or min(self.dims) < 1):
+                raise ValueError(
+                    f"torus needs dims=(rows, cols) >= (1, 1), "
+                    f"got {self.dims!r}")
+            object.__setattr__(self, "dims", tuple(self.dims))
+        elif self.dims is not None:
+            raise ValueError("ring topology takes no dims")
+
+    # ---- construction ------------------------------------------------ #
+
+    @classmethod
+    def parse(cls, s: "str | Topology") -> "Topology":
+        """``'ring'`` | ``'biring'`` | ``'torusRxC'`` (bidirectional,
+        v5e-style) — or an already-built :class:`Topology`."""
+        if isinstance(s, Topology):
+            return s
+        if s == "ring":
+            return cls("ring")
+        if s == "biring":
+            return cls("ring", bidirectional=True)
+        m = _TORUS_RE.match(s)
+        if m:
+            return cls("torus", (int(m.group(1)), int(m.group(2))),
+                       bidirectional=True)
+        raise ValueError(
+            f"unknown topology {s!r} (want 'ring', 'biring', 'torusRxC' "
+            f"or a Topology instance)")
+
+    def describe(self) -> str:
+        if self.kind == "torus":
+            ny, nx = self.dims
+            link = "bidirectional" if self.bidirectional else \
+                "unidirectional"
+            return f"{ny}x{nx} torus, {link} links"
+        return ("bidirectional ring" if self.bidirectional else
+                "unidirectional ring")
+
+    # ---- geometry ---------------------------------------------------- #
+
+    def n_links_ok(self, n_chips: int) -> bool:
+        """Does this wiring exist for ``n_chips`` chips?"""
+        if self.kind == "torus":
+            ny, nx = self.dims
+            return ny * nx == n_chips
+        return True
+
+    def grid(self, n_chips: int) -> tuple[int, int]:
+        """(rows, cols) — a ring is an ``n x 1`` grid (one band axis)."""
+        if self.kind == "torus":
+            return self.dims
+        return (n_chips, 1)
+
+    # ---- ring primitives --------------------------------------------- #
+
+    def _dir(self, x: int) -> int:
+        """Bidirectional links split a collective's bottleneck load."""
+        return (x + 1) // 2 if self.bidirectional else x
+
+    @staticmethod
+    def _ring_split(k: int, a: int) -> int:
+        """Uni-ring gather/scatter/all-gather/reduce-scatter bottleneck
+        over ``k`` chips of an ``a``-element tensor."""
+        if k <= 1:
+            return 0
+        return math.ceil(a * (k - 1) / k)
+
+    # ---- whole-cluster collectives (bottleneck-link elements) --------- #
+
+    def gather(self, n_chips: int, a: int) -> int:
+        """Sharded-over-all-chips tensor collected onto one chip: axis-1
+        rings funnel each band row (in parallel), then the axis-0 ring
+        funnels the full tensor."""
+        ny, nx = self.grid(n_chips)
+        return (self._dir(self._ring_split(nx, math.ceil(a / ny)))
+                + self._dir(self._ring_split(ny, a)))
+
+    def scatter(self, n_chips: int, a: int) -> int:
+        """One chip's tensor distributed into per-chip shards (reverse
+        gather — same bottleneck)."""
+        return self.gather(n_chips, a)
+
+    def allgather(self, n_chips: int, a: int) -> int:
+        """Every chip ends with the full ``a``-element tensor."""
+        return self.gather(n_chips, a)
+
+    def reduce_scatter(self, n_chips: int, a: int) -> int:
+        """Per-chip partial sums combined and left sharded (the hybrid
+        input-channel follow-up's collective; same ring bottleneck as
+        the all-gather, per the standard ring algorithm)."""
+        return self.gather(n_chips, a)
+
+    def all_to_all(self, n_chips: int, a: int) -> int:
+        """Resharding bound (e.g. channel -> row): priced at the
+        all-gather bottleneck, as in the PR-3 ring model."""
+        return self.allgather(n_chips, a)
+
+    def bcast(self, n_chips: int, a: int) -> int:
+        """One chip's full tensor pipelined to every chip, axis by axis."""
+        ny, nx = self.grid(n_chips)
+        out = 0
+        if ny > 1:
+            out += self._dir(a)
+        if nx > 1:
+            out += self._dir(a)
+        return out
+
+    # ---- single-axis collectives (hybrid row x channel sharding) ------ #
+
+    def allgather_axis1(self, n_chips: int, a: int) -> int:
+        """Each band row all-gathers its own ``a/rows`` slice along the
+        kernel-channel axis; rows run in parallel."""
+        ny, nx = self.grid(n_chips)
+        return self._dir(self._ring_split(nx, math.ceil(a / ny)))
+
+    def scatter_axis0(self, n_chips: int, a: int) -> int:
+        """Chip 0's tensor split into band rows along the row axis."""
+        ny, _ = self.grid(n_chips)
+        return self._dir(self._ring_split(ny, a))
+
+    def bcast_axis1(self, n_chips: int, a: int) -> int:
+        """Each band-row head broadcasts its ``a/rows`` band along the
+        kernel-channel axis; rows run in parallel."""
+        ny, nx = self.grid(n_chips)
+        if nx <= 1:
+            return 0
+        return self._dir(math.ceil(a / ny))
+
+
+RING = Topology("ring")
+BIRING = Topology("ring", bidirectional=True)
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterModel:
-    """``n_chips`` identical accelerators joined by ICI links in a ring.
+    """``n_chips`` identical accelerators joined by ICI links.
 
     Units (matching the :class:`HardwareModel` docstring above): all
     durations are accelerator cycles and all sizes are unit-less element
     counts.  ``chip`` is the per-chip platform model (its ``t_l``/``t_w``
     price HBM traffic); ``t_ici`` is the cycles to move ONE tensor element
     across one ICI link — the inter-chip counterpart of ``t_l``.  The
-    duration of an ICI phase is ``bottleneck_link_elements * t_ici``:
-    links transfer in parallel (a ring halo exchange costs one boundary's
-    elements, not the sum), but chips do NOT overlap ICI with compute —
-    the same conservative sequential accounting as the paper's Def 3.
+    duration of an ICI phase is ``bottleneck_link_elements * t_ici``
+    with the bottleneck count priced by :class:`Topology` (links transfer
+    in parallel — a ring halo exchange costs one boundary's elements, not
+    the sum; chips do NOT overlap ICI with compute unless the planner's
+    ``overlap`` discipline says so — the same conservative sequential
+    accounting as the paper's Def 3).
+    ``topology`` accepts ``'ring'`` (the PR-3 unidirectional default,
+    bit-exact), ``'biring'``, ``'torusRxC'`` (bidirectional, v5e-style),
+    or a :class:`Topology` instance; torus dims must tile ``n_chips``.
     On real hardware ``t_ici = dtype_bytes / ici_bw_per_link`` while
     ``t_l = dtype_bytes / hbm_bw``, so ``t_ici / t_l = hbm_bw /
     ici_bw_per_link`` (~16 on TPU v5e); see
@@ -66,17 +246,23 @@ class ClusterModel:
     chip: HardwareModel
     n_chips: int = 1
     t_ici: float = 0.0      # cycles to move one element across one ICI link
-    topology: str = "ring"
+    topology: "Topology | str" = "ring"
 
     def __post_init__(self):
         if self.n_chips < 1:
             raise ValueError(f"n_chips must be >= 1, got {self.n_chips}")
         if self.t_ici < 0:
             raise ValueError(f"t_ici must be >= 0, got {self.t_ici}")
-        if self.topology != "ring":
+        topo = Topology.parse(self.topology)
+        if not topo.n_links_ok(self.n_chips):
             raise ValueError(
-                f"only the ring topology is modelled (2-D tori are a "
-                f"ROADMAP follow-up), got {self.topology!r}")
+                f"topology {topo.describe()} does not tile "
+                f"n_chips={self.n_chips}")
+        object.__setattr__(self, "topology", topo)
+
+    @property
+    def topo(self) -> Topology:
+        return self.topology  # normalised to a Topology in __post_init__
 
 
 # ---------------------------------------------------------------------------

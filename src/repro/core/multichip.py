@@ -24,6 +24,22 @@ on an ICI ring — by letting every layer choose a *sharding mode*:
     the paper's eq.-12 memory bound: each chip keeps only Λ/n resident,
     so budgets that force the single-chip planner into S2 kernel-group
     swapping stay S1-feasible when sharded.
+``hybrid``
+    Row x kernel-channel sharding of ONE layer on a 2-D torus: the
+    chips form a ``rows x cols`` grid (``Topology.grid``), the output
+    rows split into ``rows`` bands along axis 0 and the kernel set into
+    ``cols`` groups along axis 1; chip ``(i, j)`` solves band ``i`` of
+    kernel group ``j``.  The inbound collective decomposes per axis:
+    halo rows shift along the row axis, each band's input map
+    all-gathers along the kernel-channel axis (rows in parallel) — the
+    kernel split here is over *output* channels, so no partial sums are
+    needed; ``Topology.reduce_scatter`` prices the input-channel
+    variant for the follow-up.  A ``rows x 1`` grid degenerates to
+    ``row`` and a ``1 x cols`` grid to ``channel`` exactly (the
+    produced layout and every transition collapse to the pure mode's —
+    property-tested).  Hybrid needs the full grid active, so it is
+    infeasible for a layer with fewer output rows than grid rows (or
+    fewer kernels than grid cols).
 
 Duration accounting (Def 3 extended):
 
@@ -32,10 +48,15 @@ Duration accounting (Def 3 extended):
     layer duration = max(max-over-chips compute, ICI)         (overlap)
 
 By default ICI transfers are serialised against compute (conservative,
-predictable — the paper's sequential-step spirit) while the ring links
+predictable — the paper's sequential-step spirit) while the links
 themselves run in parallel, so an ICI phase costs its *bottleneck link's*
-element count, in the direction of Chen et al.'s communication lower
-bounds for convolution accelerators (arXiv:1911.05662).  With
+element count — priced per :class:`~repro.core.cost_model.Topology`
+(unidirectional ring, bidirectional ring, 2-D torus) in the direction of
+Chen et al.'s communication lower bounds for convolution accelerators
+(arXiv:1911.05662).  The unidirectional ring reproduces the PR-3/PR-4
+numbers bit-exactly (regression-gated); bidirectional links halve every
+split-tensor collective's bottleneck, so a biring plan is never slower
+than the ring plan of the same network.  With
 ``overlap=True`` the inbound exchange of each stage is double-buffered
 under compute (the Stoutchinin et al. halo-cascade discipline,
 arXiv:1902.01492, and the same double-buffering our Def-3 HBM accounting
@@ -50,10 +71,21 @@ Row bands are near-even by default; ``balance_rows=True`` sizes them by
 solved per-chip *duration* (``balanced_row_heights``) so the
 max-over-chips term never exceeds the row-balanced one.
 
+``same_pad=True`` asserts the specs' already-padded inputs are ``SAME``
+padding (``max(0, h_k - s_h)`` zero rows split top/bottom): edge bands
+then skip the first loads of the padding rows inside their halo-extended
+windows — position-*dependent* band durations that make
+``balanced_row_heights`` bite systematically (edge bands get more rows).
+The savings are analytic (clamped to the shard strategy's first-load
+traffic) and carried on each ``ShardPlan.pad_saved`` so the cluster
+simulator can still reconcile measured durations exactly.
+
 Layout approximations (documented, tested loose): band boundaries between
 consecutive row-sharded layers are assumed aligned (pooling between convs
-redistributes rows on-chip, as in ``core.network_planner``); 2-D tori and
-multi-chip inter-layer VMEM reuse are ROADMAP follow-ups.
+redistributes rows on-chip, as in ``core.network_planner``); pure-row
+bands on a torus are laid row-major across the grid, and the wrap
+boundary between grid rows is priced as one hop like every other
+boundary; multi-chip inter-layer VMEM reuse stays a ROADMAP follow-up.
 
 ``plan_multichip_network`` wraps :func:`plan_network` so the 1-chip case
 reproduces today's single-chip plans *exactly* (inter-layer reuse
@@ -64,7 +96,6 @@ sets; co-scheduled multi-chip cascading is a ROADMAP follow-up).
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Sequence
 
@@ -75,10 +106,19 @@ from repro.core.network_planner import (InfeasibleNetworkError, NetworkPlan,
                                         plan_network, resolve_group_size)
 
 MODES = ("replicate", "row", "channel")
+HYBRID_MODES = MODES + ("hybrid",)
 
 # initial activation layout: the host stages the network input in every
 # chip's DRAM, so layer 0 pays no ICI in any mode.
 _INPUT_LAYOUT = "all"
+
+
+def mode_alphabet(cluster: ClusterModel) -> tuple[str, ...]:
+    """Sharding modes available on this cluster's topology: hybrid
+    row x channel grids need a second torus axis to shard along."""
+    if cluster.topo.kind == "torus":
+        return HYBRID_MODES
+    return MODES
 
 
 # --------------------------------------------------------------------- #
@@ -115,12 +155,12 @@ def row_shard_specs(spec: ConvSpec, n_chips: int,
     return shards
 
 
-def band_solve_duration(spec: ConvSpec, rows: int, hw,
-                        max_group: int | None,
-                        solve_kwargs: dict) -> float | None:
-    """Full Def-3 duration of a ``rows``-row band's halo-extended
-    sub-convolution through the LRU-cached solver; None when no feasible
-    strategy exists at that height."""
+def _band_solve(spec: ConvSpec, rows: int, hw,
+                max_group: int | None, solve_kwargs: dict
+                ) -> tuple[float, float] | None:
+    """(full Def-3 duration, first-load duration) of a ``rows``-row
+    band's halo-extended sub-convolution through the LRU-cached solver;
+    None when no feasible strategy exists at that height."""
     sub = dataclasses.replace(spec, h_in=(rows - 1) * spec.s_h + spec.h_k)
     p = resolve_group_size(sub, hw, max_group)
     try:
@@ -130,12 +170,52 @@ def band_solve_duration(spec: ConvSpec, rows: int, hw,
     if hw.size_mem is not None and \
             res.strategy.peak_footprint_elements() > hw.size_mem:
         return None
-    return res.strategy.full_duration(hw)
+    return (res.strategy.full_duration(hw),
+            res.strategy.first_load_duration(hw))
+
+
+def band_solve_duration(spec: ConvSpec, rows: int, hw,
+                        max_group: int | None,
+                        solve_kwargs: dict) -> float | None:
+    """Full Def-3 duration of a ``rows``-row band's halo-extended
+    sub-convolution through the LRU-cached solver; None when no feasible
+    strategy exists at that height."""
+    info = _band_solve(spec, rows, hw, max_group, solve_kwargs)
+    return None if info is None else info[0]
+
+
+def same_pad_rows(spec: ConvSpec) -> tuple[int, int]:
+    """(top, bottom) zero rows of a ``SAME``-padded (already-padded)
+    input: ``max(0, h_k - s_h)`` total, split top-light like XLA."""
+    pad = max(0, spec.h_k - spec.s_h)
+    return pad // 2, pad - pad // 2
+
+
+def band_pad_rows(spec: ConvSpec, r0: int, r1: int) -> int:
+    """Padding rows inside band ``[r0, r1)``'s halo-extended input
+    window under ``SAME`` padding — rows an edge band never needs to
+    load from DRAM (they are zeros the chip can materialise)."""
+    top, bot = same_pad_rows(spec)
+    h0 = r0 * spec.s_h
+    h1 = h0 + (r1 - r0 - 1) * spec.s_h + spec.h_k
+    return max(0, top - h0) + max(0, h1 - (spec.h_in - bot))
+
+
+def _band_pad_saving(spec: ConvSpec, r0: int, r1: int, hw,
+                     first_load: float) -> float:
+    """Analytic duration saved by not loading a band's padding rows:
+    their spatial pixels' first loads, clamped to the strategy's
+    measured first-load traffic (reloads stay charged — conservative)."""
+    pads = band_pad_rows(spec, r0, r1)
+    if not pads:
+        return 0.0
+    return min(pads * spec.w_in * hw.t_l, first_load)
 
 
 def balanced_row_heights(spec: ConvSpec, hw, n_chips: int,
                          max_group: int | None,
-                         solve_kwargs: dict) -> list[int] | None:
+                         solve_kwargs: dict,
+                         same_pad: bool = False) -> list[int] | None:
     """Duration-balanced band heights: choose per-chip band heights whose
     solved max-over-chips duration is minimal, instead of balancing raw
     row counts.  The per-height duration curve ``d(rows)`` is probed
@@ -146,26 +226,38 @@ def balanced_row_heights(spec: ConvSpec, hw, n_chips: int,
     ``h_out`` rows into ``n`` bands minimising ``max d(height)``.  The
     even split is always admissible, so the result never exceeds the
     row-balanced max-over-chips duration (tests/test_multichip_overlap).
+    With ``same_pad`` the duration of a band is position-dependent (edge
+    bands skip their padding rows' first loads), so the DP prices band
+    ``[j-r, j)`` at its actual position and the returned heights keep
+    band order — the asymmetric optimum gives edge bands more rows.
     Returns None when some required height has no feasible strategy."""
     n = min(n_chips, spec.h_out)
     base, extra = divmod(spec.h_out, n)
     r_cap = min(spec.h_out, base + (1 if extra else 0) + 1)
     d: dict[int, float] = {}
+    fl: dict[int, float] = {}
     for r in range(1, r_cap + 1):
-        dur = band_solve_duration(spec, r, hw, max_group, solve_kwargs)
-        if dur is not None:
-            d[r] = dur
+        info = _band_solve(spec, r, hw, max_group, solve_kwargs)
+        if info is not None:
+            d[r], fl[r] = info
+
+    def band_dur(r0: int, r: int) -> float:
+        if not same_pad:
+            return d[r]
+        return max(0.0, d[r] - _band_pad_saving(spec, r0, r0 + r, hw,
+                                                fl[r]))
+
     inf = float("inf")
-    # best[j][k]: minimal max-duration tiling j rows with k bands
+    # best[j][k]: minimal max-duration tiling the first j rows with k bands
     best = [[inf] * (n + 1) for _ in range(spec.h_out + 1)]
     pick = [[0] * (n + 1) for _ in range(spec.h_out + 1)]
     best[0][0] = 0.0
     for j in range(1, spec.h_out + 1):
         for k in range(1, n + 1):
-            for r, dur in d.items():
+            for r in d:
                 if r > j:
                     continue
-                v = max(best[j - r][k - 1], dur)
+                v = max(best[j - r][k - 1], band_dur(j - r, r))
                 if v < best[j][k]:
                     best[j][k] = v
                     pick[j][k] = r
@@ -177,7 +269,10 @@ def balanced_row_heights(spec: ConvSpec, hw, n_chips: int,
         r = pick[j][k]
         heights.append(r)
         j, k = j - r, k - 1
-    heights.sort(reverse=True)       # widest band on chip 0, like the
+    if same_pad:
+        heights.reverse()            # positions matter: keep band order
+    else:
+        heights.sort(reverse=True)   # widest band on chip 0, like the
     return heights                   # near-even split's extra-row layout
 
 
@@ -200,8 +295,33 @@ def kernel_shard_specs(spec: ConvSpec, n_chips: int
     return shards
 
 
+def hybrid_shard_specs(spec: ConvSpec, rows: int, cols: int,
+                       heights: Sequence[int] | None = None,
+                       ) -> list[tuple[int, tuple[int, int],
+                                       tuple[int, int], ConvSpec]]:
+    """Carve ``spec`` into a ``rows x cols`` grid of (row band x kernel
+    group) shards, chip ``i * cols + j`` taking band ``i`` of kernel
+    group ``j``.  Returns ``(chip, (row0, row1), (kid0, kid1),
+    shard_spec)`` quadruples.  Unlike the pure modes, the grid must be
+    fully active — a layer with fewer output rows than ``rows`` (or
+    fewer kernels than ``cols``) cannot be hybrid-sharded."""
+    if rows > spec.h_out or cols > spec.n_kernels:
+        raise ValueError(
+            f"hybrid grid {rows}x{cols} does not fit layer "
+            f"h_out={spec.h_out}, n_kernels={spec.n_kernels}")
+    bands = row_shard_specs(spec, rows, heights)
+    kgroups = kernel_shard_specs(spec, cols)
+    shards = []
+    for i, (_, band, bspec) in enumerate(bands):
+        for j, (_, krange, _) in enumerate(kgroups):
+            shards.append((i * cols + j, band, krange,
+                           dataclasses.replace(
+                               bspec, n_kernels=krange[1] - krange[0])))
+    return shards
+
+
 def halo_elements(spec: ConvSpec) -> int:
-    """Elements one ring boundary exchanges between consecutive
+    """Elements one band boundary exchanges between consecutive
     row-sharded layers: the consumer's halo rows (``h_k - s_h`` input
     rows when the stride undershoots the kernel, else none), channel
     expanded."""
@@ -212,47 +332,84 @@ def halo_elements(spec: ConvSpec) -> int:
 # ICI pricing: activation layouts and resharding
 # --------------------------------------------------------------------- #
 
-_REQUIRED_LAYOUT = {"replicate": "single", "row": "row", "channel": "all"}
+_REQUIRED_LAYOUT = {"replicate": "single", "row": "row", "channel": "all",
+                    "hybrid": "rowgrid"}
 
 
-def _produced_layout(mode: str, active_chips: int) -> str:
+def _produced_layout(mode: str, active_chips: int,
+                     grid: tuple[int, int] | None = None) -> str:
     """Layout of a layer's output map.  A single active shard owns the
-    whole map, whatever the nominal mode."""
+    whole map, whatever the nominal mode; a hybrid grid with a trivial
+    axis collapses to the pure mode's layout (the ``r x 1`` / ``1 x c``
+    degeneracies)."""
     if active_chips <= 1:
         return "single"
+    if mode == "hybrid":
+        ny, nx = grid
+        if nx == 1:
+            return "row"
+        if ny == 1:
+            return "channel"
+        return "hybrid"
     return {"replicate": "single", "row": "row", "channel": "channel"}[mode]
 
 
 def _transition_elements(frm: str, mode: str, nxt: ConvSpec,
-                         a_full: int, n_chips: int) -> int:
+                         a_full: int, cluster: ClusterModel) -> int:
     """Bottleneck-link ICI elements to reshape an activation from layout
-    ``frm`` into what ``mode`` requires for consumer ``nxt``.
+    ``frm`` into what ``mode`` requires for consumer ``nxt``, priced by
+    the cluster's :class:`~repro.core.cost_model.Topology` collectives:
 
-    ``a_full`` is the full activation size (elements).  Ring model:
-    * gather/scatter against one chip serialises ``(n-1)/n * A`` on that
-      chip's links;
-    * an all-gather from any sharded layout moves ``(n-1)/n * A`` per
-      link (each chip forwards everyone else's shard);
-    * a pipelined broadcast from one chip pushes the full ``A`` through
-      its link;
+    * gather/scatter against one chip and the all-gather from any
+      sharded layout funnel ``(k-1)/k`` of the tensor through a
+      bottleneck link per ring axis (halved on bidirectional links);
+    * a pipelined broadcast pushes the full tensor through the source's
+      link, once per torus axis;
     * row->row costs only the halo (links run in parallel, so one
       boundary's rows bound the phase);
-    * channel->row is an all-to-all, priced at the all-gather bound.
+    * channel->row (and any reshard out of hybrid) is an all-to-all,
+      priced at the all-gather bound;
+    * the hybrid input layout (``rowgrid``: band rows along axis 0,
+      replicated along axis 1) decomposes per axis — band all-gather
+      along the kernel-channel rings plus the axis-0 halo shift; its
+      trivial-axis cases collapse to the ``row`` / ``all`` rules, which
+      is what makes ``r x 1`` / ``1 x c`` grids price exactly like the
+      pure modes.
+
+    On the unidirectional ring every rule reduces to the PR-3 formulas
+    bit-exactly (``ceil(A*(n-1)/n)`` splits, ``A`` broadcast).
     """
+    n_chips = cluster.n_chips
     if n_chips == 1 or frm == "all":
         return 0
+    topo = cluster.topo
+    ny, nx = topo.grid(n_chips)
     to = _REQUIRED_LAYOUT[mode]
-    partial = math.ceil(a_full * (n_chips - 1) / n_chips)
+    if to == "rowgrid":                    # trivial-axis degeneracies
+        if nx == 1:
+            to = "row"
+        elif ny == 1:
+            to = "all"
     if to == "single":
-        return 0 if frm == "single" else partial
+        return 0 if frm == "single" else topo.gather(n_chips, a_full)
     if to == "row":
         if frm == "row":
             return halo_elements(nxt)
-        return partial                     # scatter / all-to-all
-    # to == "all": every chip needs the full map
+        if frm == "single":
+            return topo.scatter(n_chips, a_full)
+        return topo.all_to_all(n_chips, a_full)   # channel / hybrid
+    if to == "all":
+        if frm == "single":
+            return topo.bcast(n_chips, a_full)    # pipelined broadcast
+        return topo.allgather(n_chips, a_full)
+    # to == "rowgrid": every chip needs its band's rows, all channels
     if frm == "single":
-        return a_full                      # pipelined broadcast
-    return partial                         # ring all-gather
+        return (topo.scatter_axis0(n_chips, a_full)
+                + topo.bcast_axis1(n_chips, a_full))
+    if frm in ("row", "hybrid"):
+        return (topo.allgather_axis1(n_chips, a_full)
+                + (halo_elements(nxt) if ny > 1 else 0))
+    return topo.all_to_all(n_chips, a_full)       # channel -> rowgrid
 
 
 # --------------------------------------------------------------------- #
@@ -267,9 +424,12 @@ class ShardPlan:
     spec: ConvSpec                       # the shard's sub-convolution
     p: int
     result: solver_mod.SolveResult
-    out_rows: tuple[int, int] | None     # row mode: output-row band
-    kernel_range: tuple[int, int] | None  # channel mode: kernel ids
+    out_rows: tuple[int, int] | None     # row/hybrid: output-row band
+    kernel_range: tuple[int, int] | None  # channel/hybrid: kernel ids
     gross_duration: float                # full Def-3 duration on its chip
+    pad_saved: float = 0.0               # same_pad: edge-band first loads
+    #   skipped (gross_duration already excludes them; the simulator
+    #   reconciles measured == gross + pad_saved)
 
     @property
     def strategy(self):
@@ -286,13 +446,14 @@ class MultiChipLayerPlan:
 
     index: int
     spec: ConvSpec
-    mode: str                            # 'replicate' | 'row' | 'channel'
+    mode: str                # 'replicate' | 'row' | 'channel' | 'hybrid'
     shards: tuple[ShardPlan, ...]
     compute_duration: float              # max over chips (Def-3 gross)
     ici_elements: int                    # bottleneck-link elements, inbound
     ici_duration: float
     savings: float = 0.0                 # 1-chip path: inter-layer reuse
     overlap: bool = False                # double-buffered halo exchange
+    grid: tuple[int, int] | None = None  # hybrid: (rows, cols) shard grid
 
     def __post_init__(self):
         if self.duration < -1e-9:
@@ -342,7 +503,7 @@ class MultiChipPlan:
 
     @property
     def mode_string(self) -> str:
-        tag = {"replicate": "R", "row": "W", "channel": "K"}
+        tag = {"replicate": "R", "row": "W", "channel": "K", "hybrid": "H"}
         return "".join(tag[lp.mode] for lp in self.layers)
 
     @property
@@ -371,7 +532,8 @@ class MultiChipPlan:
     def report(self) -> str:
         c = self.cluster
         lines = [f"multichip plan: {self.name}  "
-                 f"({c.n_chips} chips, t_ici={c.t_ici:g}, "
+                 f"({c.n_chips} chips, {c.topo.describe()}, "
+                 f"t_ici={c.t_ici:g}, "
                  f"{self.n_layers} layers, planned in "
                  f"{self.planning_seconds:.2f}s, "
                  f"{self.cache_hits}/{self.solver_calls} cache hits)"]
@@ -379,8 +541,10 @@ class MultiChipPlan:
             per_chip = " ".join(f"c{s.chip}:{s.gross_duration:g}"
                                 for s in lp.shards)
             combine = ("max overlapped ici" if lp.overlap else "+ ici")
+            mode = lp.mode if lp.grid is None else \
+                f"hybrid{lp.grid[0]}x{lp.grid[1]}"
             lines.append(
-                f"  L{lp.index}: {lp.mode:<9} x{lp.active_chips} "
+                f"  L{lp.index}: {mode:<9} x{lp.active_chips} "
                 f"dur={lp.duration:g} (compute {lp.compute_duration:g}"
                 f" {combine} {lp.ici_duration:g}"
                 f"{f' - reuse {lp.savings:g}' if lp.savings else ''})"
@@ -407,33 +571,53 @@ class _ModeEval:
     mode: str
     shards: tuple[ShardPlan, ...]
     compute_duration: float
+    grid: tuple[int, int] | None = None  # hybrid shard grid
 
     @property
     def layout(self) -> str:
-        return _produced_layout(self.mode, len(self.shards))
+        return _produced_layout(self.mode, len(self.shards), self.grid)
 
 
 def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
                max_group: int | None, solve_kwargs: dict,
                balance_rows: bool = False,
+               same_pad: bool = False,
                ) -> _ModeEval | None:
     """Solve every shard of ``spec`` under ``mode`` through the LRU-cached
-    solver; None when any shard fits no strategy family (mode infeasible
-    for this layer)."""
+    solver; None when any shard fits no strategy family or the mode does
+    not apply (hybrid off-torus, or a hybrid grid the layer can't fill)."""
     hw = cluster.chip
+    grid = None
     if mode == "replicate":
         raw = [(0, None, None, spec)]
     elif mode == "row":
         heights = None
         if balance_rows:
             heights = balanced_row_heights(spec, hw, cluster.n_chips,
-                                           max_group, solve_kwargs)
+                                           max_group, solve_kwargs,
+                                           same_pad=same_pad)
         raw = [(c, band, None, s)
                for c, band, s in row_shard_specs(spec, cluster.n_chips,
                                                  heights)]
     elif mode == "channel":
         raw = [(c, None, krange, s)
                for c, krange, s in kernel_shard_specs(spec, cluster.n_chips)]
+    elif mode == "hybrid":
+        if cluster.topo.kind != "torus":
+            return None                  # needs a second axis to shard on
+        ny, nx = cluster.topo.grid(cluster.n_chips)
+        if ny > spec.h_out or nx > spec.n_kernels:
+            return None                  # infeasible chip grid: the full
+        grid = (ny, nx)                  # rows x cols grid must be active
+        heights = None
+        if balance_rows:
+            # the widest kernel group's bands dominate the per-chip max
+            kmax = max(k1 - k0 for _, (k0, k1), _ in
+                       kernel_shard_specs(spec, nx))
+            heights = balanced_row_heights(
+                dataclasses.replace(spec, n_kernels=kmax), hw, ny,
+                max_group, solve_kwargs, same_pad=same_pad)
+        raw = hybrid_shard_specs(spec, ny, nx, heights)
     else:
         raise ValueError(f"unknown sharding mode {mode!r}")
     shards = []
@@ -446,12 +630,24 @@ def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
         if hw.size_mem is not None and \
                 res.strategy.peak_footprint_elements() > hw.size_mem:
             return None
+        saved = 0.0
+        if same_pad:
+            # every shard skips the padding rows inside its own input
+            # window — replicate/channel shards span the full height, so
+            # they get the whole-map credit and the mode DP stays
+            # consistently priced across the alphabet
+            r0, r1 = band if band is not None else (0, spec.h_out)
+            saved = _band_pad_saving(
+                spec, r0, r1, hw,
+                res.strategy.first_load_duration(hw))
         shards.append(ShardPlan(
             chip=chip, spec=sspec, p=p, result=res,
             out_rows=band, kernel_range=krange,
-            gross_duration=res.strategy.full_duration(hw)))
+            gross_duration=res.strategy.full_duration(hw) - saved,
+            pad_saved=saved))
     return _ModeEval(mode=mode, shards=tuple(shards),
-                     compute_duration=max(s.gross_duration for s in shards))
+                     compute_duration=max(s.gross_duration for s in shards),
+                     grid=grid)
 
 
 def ici_schedule(specs: Sequence[ConvSpec], modes: Sequence[str],
@@ -462,17 +658,17 @@ def ici_schedule(specs: Sequence[ConvSpec], modes: Sequence[str],
     the planner charges and the simulator cross-checks."""
     if len(specs) != len(modes) or len(specs) != len(active):
         raise ValueError("specs/modes/active length mismatch")
+    grid = cluster.topo.grid(cluster.n_chips)
     per_layer = []
     layout = _INPUT_LAYOUT
     for spec, mode, n_act in zip(specs, modes, active):
         per_layer.append(_transition_elements(
-            layout, mode, spec, spec.num_pixels * spec.c_in,
-            cluster.n_chips))
-        layout = _produced_layout(mode, n_act)
+            layout, mode, spec, spec.num_pixels * spec.c_in, cluster))
+        layout = _produced_layout(mode, n_act,
+                                  grid if mode == "hybrid" else None)
     last = specs[-1]
     final = _transition_elements(
-        layout, "replicate", last, last.num_patches * last.c_out,
-        cluster.n_chips)
+        layout, "replicate", last, last.num_patches * last.c_out, cluster)
     return per_layer, final
 
 
@@ -490,35 +686,51 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                            use_milp: bool = False,
                            time_limit: float = 10.0,
                            rng_seed: int = 0,
-                           modes: Sequence[str] = MODES,
+                           modes: Sequence[str] | None = None,
                            include_single_chip_baseline: bool = True,
                            overlap: bool = False,
                            balance_rows: bool = False,
+                           same_pad: bool = False,
                            ) -> MultiChipPlan:
-    """Plan a conv network on an ICI ring of ``cluster.n_chips`` chips.
+    """Plan a conv network on ``cluster.n_chips`` chips wired as
+    ``cluster.topology`` (unidirectional/bidirectional ring or 2-D torus).
 
     ``n_chips == 1`` delegates to :func:`plan_network` and reproduces its
     plan exactly (same strategies, same total duration, inter-layer reuse
     included).  Otherwise every layer's feasible sharding modes are priced
     — shards through ``solver.solve_cached`` (budget-aware S1/S2 choice,
-    LRU-shared with the single-chip planner), resharding over ICI — and a
-    dynamic program picks the mode sequence minimising total duration
-    including a final gather of the last activation to chip 0.  Raises
-    :class:`InfeasibleNetworkError` when some layer fits under no mode.
+    LRU-shared with the single-chip planner), resharding over
+    topology-priced ICI collectives — and a dynamic program picks the
+    mode sequence minimising total duration including a final gather of
+    the last activation to chip 0.  ``modes`` defaults to the topology's
+    alphabet (:func:`mode_alphabet`: hybrid row x channel grids need a
+    torus).  Raises :class:`InfeasibleNetworkError` when some layer fits
+    under no mode — the message names the layer, budget, chip count and
+    topology.
 
     ``overlap=True`` prices each layer's inbound ICI as double-buffered
     against compute — per-layer duration ``max(compute, ICI)`` instead of
     ``compute + ICI`` (the halo/reshard of stage l streams while stage
     l-1's band is still computing; only the final gather stays serial).
     ``balance_rows=True`` sizes row bands by solved per-chip *duration*
-    (:func:`balanced_row_heights`) instead of raw row counts.  Both
-    default to False, which reproduces the serialised row-balanced
-    accounting bit-exactly (the paper's Def-3 spirit; the benchmark's
-    trajectory baseline).
+    (:func:`balanced_row_heights`) instead of raw row counts.
+    ``same_pad=True`` asserts the already-padded inputs are SAME padding,
+    so edge bands skip their padding rows' first loads (position-
+    dependent band durations; see the module note).  All three default
+    to False, which reproduces the serialised row-balanced accounting
+    bit-exactly (the paper's Def-3 spirit; the benchmark's trajectory
+    baseline).
     """
     specs = list(specs)
     if not specs:
         raise ValueError("empty network")
+    if same_pad and cluster.n_chips == 1:
+        raise ValueError(
+            "same_pad models the sharded planner's band accounting; the "
+            "1-chip path delegates to plan_network, which does not model "
+            "padding — plan with n_chips >= 2 or drop same_pad")
+    if modes is None:
+        modes = mode_alphabet(cluster)
     solve_kwargs = dict(nb_data_reload=nb_data_reload,
                         time_limit=time_limit, polish_iters=polish_iters,
                         use_milp=use_milp, rng_seed=rng_seed,
@@ -560,7 +772,7 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         layer_evals = {}
         for mode in modes:
             ev = _eval_mode(spec, mode, cluster, max_group, solve_kwargs,
-                            balance_rows=balance_rows)
+                            balance_rows=balance_rows, same_pad=same_pad)
             if ev is not None:
                 layer_evals[mode] = ev
         if not layer_evals:
@@ -568,12 +780,13 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                 f"layer {i} ({spec.c_in}x{spec.h_in}x{spec.w_in}"
                 f"->{spec.c_out}): no sharding mode fits "
                 f"size_mem={cluster.chip.size_mem} on "
-                f"{cluster.n_chips} chips")
+                f"{cluster.n_chips} chips ({cluster.topo.describe()}; "
+                f"a hybrid grid also needs rows<=h_out={spec.h_out} "
+                f"and cols<=n_kernels={spec.n_kernels})")
         evals.append(layer_evals)
 
     # 2) Viterbi DP over (layer, mode): resharding couples neighbours
     t_ici = cluster.t_ici
-    n = cluster.n_chips
     # cost[mode] = best total through layer i ending in this mode
     cost: dict[str, float] = {}
     back: list[dict[str, tuple[str | None, int]]] = []
@@ -593,14 +806,15 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         for mode, ev in layer_evals.items():
             if i == 0:
                 elems = _transition_elements(
-                    _INPUT_LAYOUT, mode, specs[i], a_full, n)
+                    _INPUT_LAYOUT, mode, specs[i], a_full, cluster)
                 nxt_cost[mode] = stage_cost(ev.compute_duration, elems)
                 choices[mode] = (None, elems)
                 continue
             best_prev, best_val, best_elems = None, float("inf"), 0
             for pmode, pcost in cost.items():
                 elems = _transition_elements(
-                    evals[i - 1][pmode].layout, mode, specs[i], a_full, n)
+                    evals[i - 1][pmode].layout, mode, specs[i], a_full,
+                    cluster)
                 val = pcost + stage_cost(ev.compute_duration, elems)
                 if val < best_val:
                     best_prev, best_val, best_elems = pmode, val, elems
@@ -615,7 +829,7 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     best_mode, best_total, final_elems = None, float("inf"), 0
     for mode, val in cost.items():
         elems = _transition_elements(
-            evals[-1][mode].layout, "replicate", last, a_last, n)
+            evals[-1][mode].layout, "replicate", last, a_last, cluster)
         if val + elems * t_ici < best_total:
             best_mode, best_total = mode, val + elems * t_ici
             final_elems = elems
@@ -637,14 +851,30 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
             compute_duration=evals[i][chosen[i]].compute_duration,
             ici_elements=in_elems[i],
             ici_duration=in_elems[i] * t_ici,
-            overlap=overlap)
+            overlap=overlap,
+            grid=evals[i][chosen[i]].grid)
         for i in range(len(specs)))
 
     single = None
     if include_single_chip_baseline:
         try:
-            single = plan_network(specs, cluster.chip, name=name,
-                                  **plan_kwargs).total_duration
+            net = plan_network(specs, cluster.chip, name=name,
+                               **plan_kwargs)
+            single = net.total_duration
+            if same_pad:
+                # credit the baseline with the same whole-map padding
+                # savings the shards get, clamped to each layer's first
+                # loads NOT already covered by inter-layer reuse — so
+                # speedup_vs_single_chip compares consistently-padded
+                # accountings and never double-counts a saved load
+                hw = cluster.chip
+                for lp in net.layers:
+                    whole = _band_pad_saving(
+                        lp.spec, 0, lp.spec.h_out, hw,
+                        lp.result.strategy.first_load_duration(hw))
+                    single -= min(whole, max(
+                        0.0, lp.result.strategy.first_load_duration(hw)
+                        - lp.input_load_saved))
         except InfeasibleNetworkError:
             single = None               # sharding extends feasibility
 

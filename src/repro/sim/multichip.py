@@ -3,24 +3,27 @@ the existing single-chip machinery and reconcile the plan's accounting.
 
 Each layer materialises ONE shared :class:`ConvLayer` and every shard's
 sub-problem is carved out of it — a row band's halo-extended input window
-(full kernel set) or a kernel subset (full input) — then run unchanged
-through the Sec-6 ``System`` (S1 strategies) or ``sim.s2.run_s2``
-(kernel-group swapping).  The shard outputs are stitched back into the
-full output tensor and compared against the full layer's reference
-convolution, so band offsets, halo extents, and kernel ranges are
-validated end to end, not just each shard in isolation.  The
+(full kernel set), a kernel subset (full input), or a hybrid band x
+kernel-group cell (both slicings at once, the 2-D torus grid) — then run
+unchanged through the Sec-6 ``System`` (S1 strategies) or
+``sim.s2.run_s2`` (kernel-group swapping).  The shard outputs are
+stitched back into the full output tensor and compared against the full
+layer's reference convolution, so band offsets, halo extents, and kernel
+ranges are validated end to end, not just each shard in isolation.  The
 reconciliation discipline matches ``sim.network``:
 
   * ``correct`` — every shard's functional run passes AND the stitched
     per-layer outputs equal the full reference convolution with no gaps;
   * ``accounting_exact`` — every shard's measured Def-3 duration equals
-    the plan's ``gross_duration`` for that shard, every layer's
+    the plan's ``gross_duration`` for that shard plus its analytic
+    ``pad_saved`` (``same_pad`` edge bands skip padding-row first loads
+    the functional simulator still performs), every layer's
     ``compute_duration`` equals the max over its shards, the plan's
     per-layer ICI charges equal an independent re-pricing of the chosen
-    mode sequence (``core.multichip.ici_schedule``), and the total
-    recomposes from the *measured* shard durations under the plan's
-    discipline — ``max(compute, ICI)`` per stage when ``plan.overlap``,
-    ``compute + ICI`` otherwise;
+    mode sequence (``core.multichip.ici_schedule`` — topology-priced
+    collectives), and the total recomposes from the *measured* shard
+    durations under the plan's discipline — ``max(compute, ICI)`` per
+    stage when ``plan.overlap``, ``compute + ICI`` otherwise;
   * ``peak_within_budget`` — every shard's *measured* peak stays within
     the per-chip ``size_mem``;
   * ICI transfers themselves are analytic (the bottleneck-link element
@@ -46,20 +49,23 @@ LayerReport = Union[SimReport, S2Report]
 
 
 def _carve_shard(full: ConvLayer, shard: ShardPlan) -> ConvLayer:
-    """The shard's sub-problem sliced out of the shared layer data."""
+    """The shard's sub-problem sliced out of the shared layer data: a
+    row band's halo-extended window, a kernel subset, or both at once
+    (hybrid grid cells)."""
     spec = full.spec
-    if shard.out_rows is not None:                 # row band
+    if shard.out_rows is None and shard.kernel_range is None:
+        return full                                # replicate
+    inp = full.input
+    kernels = full.kernels
+    if shard.out_rows is not None:                 # row band window
         r0, _ = shard.out_rows
         h0 = r0 * spec.s_h
-        return ConvLayer(
-            spec=shard.spec,
-            input=full.input[:, h0:h0 + shard.spec.h_in, :].copy(),
-            kernels=full.kernels.copy())
+        inp = inp[:, h0:h0 + shard.spec.h_in, :]
     if shard.kernel_range is not None:             # kernel subset
         k0, k1 = shard.kernel_range
-        return ConvLayer(spec=shard.spec, input=full.input.copy(),
-                         kernels=full.kernels[k0:k1].copy())
-    return full                                    # replicate
+        kernels = kernels[k0:k1]
+    return ConvLayer(spec=shard.spec, input=inp.copy(),
+                     kernels=kernels.copy())
 
 
 @dataclasses.dataclass
@@ -80,7 +86,8 @@ class MultiChipSimReport:
 
     @property
     def accounting_exact(self) -> bool:
-        """Per-shard sim == plan gross, per-layer compute == max shard,
+        """Per-shard sim == plan gross + pad_saved (edge bands' skipped
+        padding-row loads are analytic), per-layer compute == max shard,
         the plan's ICI charges match an independent re-pricing, and the
         total recomposes from *measured* shard durations under the plan's
         overlap discipline (``max(compute, ICI)`` per stage when
@@ -88,9 +95,11 @@ class MultiChipSimReport:
         total = self.plan.final_gather_duration
         for reps, lp in zip(self.shard_reports, self.plan.layers):
             for r, shard in zip(reps, lp.shards):
-                if abs(r.total_duration - shard.gross_duration) > 1e-9:
+                if abs(r.total_duration - shard.pad_saved
+                       - shard.gross_duration) > 1e-9:
                     return False
-            compute = max(r.total_duration for r in reps)
+            compute = max(r.total_duration - s.pad_saved
+                          for r, s in zip(reps, lp.shards))
             if abs(compute - lp.compute_duration) > 1e-9:
                 return False
             if self.plan.overlap:
@@ -150,14 +159,11 @@ def simulate_multichip(plan: MultiChipPlan, seed: int = 0,
             else:
                 rep = System(layer, hw).run(shard.strategy, check=check)
             reps.append(rep)
-            if shard.out_rows is not None:
-                r0, r1 = shard.out_rows
-                assembled[:, r0:r1, :] = rep.output
-            elif shard.kernel_range is not None:
-                k0, k1 = shard.kernel_range
-                assembled[k0:k1] = rep.output
-            else:
-                assembled[:] = rep.output
+            rows = slice(None) if shard.out_rows is None else \
+                slice(*shard.out_rows)
+            kers = slice(None) if shard.kernel_range is None else \
+                slice(*shard.kernel_range)
+            assembled[kers, rows, :] = rep.output
         stitched_ok.append(
             not np.any(np.isnan(assembled)) and bool(
                 np.allclose(assembled, ref, rtol=1e-4, atol=1e-4)))
