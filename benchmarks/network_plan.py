@@ -53,6 +53,8 @@ import os
 import sys
 import time
 
+from repro.analysis.diagnostics import PlanVerificationError
+from repro.analysis.verifier import assert_verified
 from repro.configs.clusters import make_cluster, torus_dims
 from repro.configs.networks import NETWORKS
 from repro.configs.tight import budget_points
@@ -102,6 +104,17 @@ def _gain_vs_pr3(table: str, key, duration: float) -> float | None:
     return round(1.0 - duration / base, 4)
 
 
+def _verify_plan(plan) -> bool:
+    """Static postcondition on every benchmarked plan (repro.analysis):
+    a False here is a planner/cost-model bug, and the run fails."""
+    try:
+        assert_verified(plan)
+        return True
+    except PlanVerificationError as e:
+        print(f"[verify] FAIL:\n{e.report.render()}", file=sys.stderr)
+        return False
+
+
 def _lru_stats() -> dict:
     s = solver.solve_cached.cache_info()
     k = solver.best_s2_cached.cache_info()
@@ -128,6 +141,7 @@ def bench_network(name: str, hw: HardwareModel, *, iters: int,
     return {
         "network": name,
         "feasible": True,
+        "verifier_clean": _verify_plan(plan),
         "n_layers": plan.n_layers,
         "n_s2_layers": plan.n_s2_layers,
         "peak_footprint": plan.peak_footprint,
@@ -181,6 +195,7 @@ def sweep_tight_memory(name: str, budgets: list[int], *, nbop_pe: int,
         rows.append({
             "size_mem": size_mem,
             "feasible": True,
+            "verifier_clean": _verify_plan(plan),
             "n_s2_layers": plan.n_s2_layers,
             "peak_footprint": plan.peak_footprint,
             "total_duration": plan.total_duration,
@@ -257,6 +272,7 @@ def sweep_chip_counts(name: str, chip_counts: list[int],
                 "n_chips": n_chips,
                 "topology": label,
                 "feasible": True,
+                "verifier_clean": _verify_plan(ser) and _verify_plan(plan),
                 "total_duration": plan.total_duration,
                 "serialized_duration": ser.total_duration,
                 "modes": plan.mode_string,
@@ -275,6 +291,17 @@ def sweep_chip_counts(name: str, chip_counts: list[int],
             "points": rows}
 
 
+def _all_verifier_clean(rows: list[dict], chip_sweeps: list[dict],
+                        sweeps: list[dict] | None) -> bool:
+    """True when every feasible plan the run built passed the static
+    verifier (the ISSUE-6 pin: a False is a planner/cost-model bug)."""
+    points = list(rows)
+    for sw in list(sweeps or []) + list(chip_sweeps):
+        points.extend(sw["points"])
+    return all(p.get("verifier_clean", True) for p in points
+               if p["feasible"])
+
+
 def write_bench_summary(path: str, rows: list[dict],
                         chip_sweeps: list[dict],
                         sweeps: list[dict] | None = None,
@@ -284,6 +311,7 @@ def write_bench_summary(path: str, rows: list[dict],
     keys (baseline: the frozen ``PR3_BASELINE`` table)."""
     summary = {
         "benchmark": "network_plan",
+        "verifier_clean": _all_verifier_clean(rows, chip_sweeps, sweeps),
         "networks": [
             {"network": r["network"],
              "feasible": r["feasible"],
@@ -436,9 +464,11 @@ def main(argv=None) -> int:
             "lru": _lru_stats(),
         }
 
+    verifier_clean = _all_verifier_clean(rows, chip_sweeps, sweeps)
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
+              "verifier_clean": verifier_clean,
               "networks": rows,
               "tight_memory_sweep": sweeps,
               "chip_sweep": chip_sweeps}
@@ -500,7 +530,11 @@ def main(argv=None) -> int:
     print("saved ->", args.out,
           *(["and", args.bench_out] if trajectory_grade else []))
 
-    ok = all(r["feasible"] and r["beats_baseline"] for r in rows)
+    if not verifier_clean:
+        print("[verify] at least one emitted plan failed static "
+              "verification — planner/cost-model bug", file=sys.stderr)
+    ok = verifier_clean
+    ok = ok and all(r["feasible"] and r["beats_baseline"] for r in rows)
     # the sweep must stay feasible and beat greedy on >= 1 budget point
     for sw in sweeps:
         feas = [p for p in sw["points"] if p["feasible"]]

@@ -1,0 +1,22 @@
+"""Static analysis for offload plans (verifier) and the repo (lint).
+
+``repro.analysis.verifier`` proves a ``NetworkPlan`` / ``MultiChipPlan``
+legal *symbolically* — per-step residency ledger, coverage, shard/ICI
+geometry, and analytic duration floors — without running the functional
+simulator.  ``repro.analysis.lint`` is a repo-specific AST pass
+(``python -m repro.analysis.lint``).
+"""
+from repro.analysis.diagnostics import (Diagnostic, PlanVerificationError,
+                                        Severity, VerificationReport)
+from repro.analysis.verifier import (verify_multichip_plan,
+                                     verify_network_plan, verify_steps)
+
+__all__ = [
+    "Diagnostic",
+    "PlanVerificationError",
+    "Severity",
+    "VerificationReport",
+    "verify_multichip_plan",
+    "verify_network_plan",
+    "verify_steps",
+]

@@ -128,7 +128,7 @@ class ConvSpec:
 
     # --- pxl_in_P constant of Sec 5.1 --------------------------------------
     @functools.cached_property
-    def pxl_in_p(self) -> frozenset[tuple[int, int]]:
+    def pxl_in_p(self) -> frozenset[tuple[int, int]]:  # lint: public-api
         """{(patch_id, pixel_id) | pixel in patch} (Example 3)."""
         pairs = []
         for pid, m in enumerate(self.patch_masks):
@@ -148,7 +148,3 @@ class ConvSpec:
             out.append(low.bit_length() - 1)
             mask ^= low
         return out
-
-
-def mask_cardinality(mask: int) -> int:
-    return mask.bit_count()

@@ -172,10 +172,16 @@ class Topology:
         """Every chip ends with the full ``a``-element tensor."""
         return self.gather(n_chips, a)
 
-    def reduce_scatter(self, n_chips: int, a: int) -> int:
+    def reduce_scatter(self, n_chips: int, a: int) -> int:  # lint: experimental-api
         """Per-chip partial sums combined and left sharded (the hybrid
         input-channel follow-up's collective; same ring bottleneck as
-        the all-gather, per the standard ring algorithm)."""
+        the all-gather, per the standard ring algorithm).
+
+        .. note:: **Experimental.**  No planner mode emits this collective
+           yet — input-channel sharding is future work (see ROADMAP).  The
+           pricing is pinned by ``tests/test_topology.py`` so the formula
+           cannot drift before it is wired in.
+        """
         return self.gather(n_chips, a)
 
     def all_to_all(self, n_chips: int, a: int) -> int:

@@ -173,7 +173,7 @@ def build_ilp(spec: ConvSpec, p: int, k: int | None = None,
     return model
 
 
-def n_var_literal(spec: ConvSpec, k: int) -> int:
+def n_var_literal(spec: ConvSpec, k: int) -> int:  # lint: public-api
     """Paper's variable-count formula (Sec 7.1):
     N_var = K * (3*(H_in*W_in) + H_out*W_out)."""
     return k * (3 * spec.num_pixels + spec.num_patches)

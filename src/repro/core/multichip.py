@@ -174,7 +174,7 @@ def _band_solve(spec: ConvSpec, rows: int, hw,
             res.strategy.first_load_duration(hw))
 
 
-def band_solve_duration(spec: ConvSpec, rows: int, hw,
+def band_solve_duration(spec: ConvSpec, rows: int, hw,  # lint: public-api
                         max_group: int | None,
                         solve_kwargs: dict) -> float | None:
     """Full Def-3 duration of a ``rows``-row band's halo-extended
@@ -691,6 +691,7 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                            overlap: bool = False,
                            balance_rows: bool = False,
                            same_pad: bool = False,
+                           verify: bool | None = None,
                            ) -> MultiChipPlan:
     """Plan a conv network on ``cluster.n_chips`` chips wired as
     ``cluster.topology`` (unidirectional/bidirectional ring or 2-D torus).
@@ -720,6 +721,11 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     to False, which reproduces the serialised row-balanced accounting
     bit-exactly (the paper's Def-3 spirit; the benchmark's trajectory
     baseline).
+
+    ``verify=True`` runs the static plan verifier
+    (``repro.analysis.verifier``) as a postcondition and raises
+    ``PlanVerificationError`` on any error-severity diagnostic; the
+    default ``None`` defers to the ``REPRO_VERIFY_PLANS`` env knob.
     """
     specs = list(specs)
     if not specs:
@@ -737,8 +743,13 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                         polish_restarts=polish_restarts)
     plan_kwargs = dict(max_group=max_group, **solve_kwargs)
 
+    from repro.analysis.verifier import assert_verified, should_verify
+    do_verify = should_verify(verify)
+
     if cluster.n_chips == 1:
-        net = plan_network(specs, cluster.chip, name=name, **plan_kwargs)
+        # the delegated plan is verified through the MultiChipPlan below
+        net = plan_network(specs, cluster.chip, name=name, verify=False,
+                           **plan_kwargs)
         layers = tuple(
             MultiChipLayerPlan(
                 index=lp.index, spec=lp.spec, mode="replicate",
@@ -751,7 +762,7 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
                 savings=lp.input_load_saved + lp.write_back_saved,
                 overlap=overlap)
             for lp in net.layers)
-        return MultiChipPlan(
+        plan = MultiChipPlan(
             name=name, cluster=cluster, layers=layers,
             total_duration=net.total_duration,
             final_gather_elements=0, final_gather_duration=0.0,
@@ -760,6 +771,9 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
             planning_seconds=net.planning_seconds,
             solver_calls=net.solver_calls, cache_hits=net.cache_hits,
             overlap=overlap, balance_rows=balance_rows)
+        if do_verify:
+            assert_verified(plan)
+        return plan
 
     hits0 = calls0 = 0
     info = solver_mod.solve_cached.cache_info()
@@ -858,8 +872,9 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     single = None
     if include_single_chip_baseline:
         try:
+            # a pricing reference, not an emitted plan: skip verification
             net = plan_network(specs, cluster.chip, name=name,
-                               **plan_kwargs)
+                               verify=False, **plan_kwargs)
             single = net.total_duration
             if same_pad:
                 # credit the baseline with the same whole-map padding
@@ -879,7 +894,7 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
             single = None               # sharding extends feasibility
 
     info = solver_mod.solve_cached.cache_info()
-    return MultiChipPlan(
+    plan = MultiChipPlan(
         name=name, cluster=cluster, layers=layers,
         total_duration=best_total,
         final_gather_elements=final_elems,
@@ -890,3 +905,6 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         solver_calls=(info.hits + info.misses) - calls0,
         cache_hits=info.hits - hits0,
         overlap=overlap, balance_rows=balance_rows)
+    if do_verify:
+        assert_verified(plan)
+    return plan

@@ -444,6 +444,7 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
                  rng_seed: int = 0,
                  allow_reuse: bool = True,
                  solve_fn: Callable[..., solver_mod.SolveResult] | None = None,
+                 verify: bool | None = None,
                  ) -> NetworkPlan:
     """Solve every layer and assemble the network schedule.
 
@@ -452,7 +453,12 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
     :class:`InfeasibleNetworkError` is raised when a layer fits no family.
     Deterministic for fixed ``rng_seed`` (restart seeds are derived from
     it; see ``solver.polish_multi``).  ``solve_fn`` overrides the cached
-    solver (tests / custom search)."""
+    solver (tests / custom search).
+
+    ``verify=True`` runs the static plan verifier
+    (``repro.analysis.verifier``) as a postcondition and raises
+    ``PlanVerificationError`` on any error-severity diagnostic; the
+    default ``None`` defers to the ``REPRO_VERIFY_PLANS`` env knob."""
     specs = list(specs)
     if not specs:
         raise ValueError("empty network")
@@ -539,9 +545,14 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
         solver_calls = (info.hits + info.misses) - calls0
 
     baseline = greedy_network_duration(specs, hw, p=p, max_group=max_group)
-    return NetworkPlan(
+    plan = NetworkPlan(
         name=name, hw=hw, layers=tuple(layers),
         total_duration=total, gross_duration=gross_total,
         baseline_duration=baseline,
         planning_seconds=planning_seconds,
         solver_calls=solver_calls, cache_hits=cache_hits)
+    # lazy import: repro.analysis depends on this module
+    from repro.analysis.verifier import assert_verified, should_verify
+    if should_verify(verify):
+        assert_verified(plan)
+    return plan

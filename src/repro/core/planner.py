@@ -173,7 +173,8 @@ def plan_decode_attention(seq_len: int, head_dim: int, q_rows: int,
             if best is None or cand.steps < best.steps:
                 best = cand
         bkv *= 2
-    assert best is not None, "no KV block fits VMEM"
+    if best is None:
+        raise ValueError("no KV block fits VMEM")
     return best
 
 
@@ -213,5 +214,6 @@ def plan_conv(spec: ConvSpec, dtype_bytes: int = 2,
         if best is None or (cand.duration_overlapped, cand.steps) < \
                 (best.duration_overlapped, best.steps):
             best = cand
-    assert best is not None, "conv does not fit VMEM at any run length"
+    if best is None:
+        raise ValueError("conv does not fit VMEM at any run length")
     return best

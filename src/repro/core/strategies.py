@@ -224,7 +224,8 @@ def tiled(spec: ConvSpec, p: int,
         if best is None or cand.pixels_loaded() + cand.n_steps < \
                 best.pixels_loaded() + best.n_steps:
             best = cand
-    assert best is not None
+    if best is None:
+        raise ValueError(f"tiled: no tile shape admits p={p} patches")
     return best
 
 
@@ -286,7 +287,7 @@ def k_min(spec: ConvSpec, p: int) -> int:
     return -(-spec.num_patches // p)
 
 
-def k_max(spec: ConvSpec) -> int:
+def k_max(spec: ConvSpec) -> int:  # lint: public-api
     """Def 15."""
     return spec.num_patches
 

@@ -225,7 +225,7 @@ def patch_major(spec: ConvSpec, p: int, kg_size: int) -> S2Strategy:
                       tuple(sched))
 
 
-def nb_patches_max_s2(spec: ConvSpec, hw: HardwareModel,
+def nb_patches_max_s2(spec: ConvSpec, hw: HardwareModel,  # lint: public-api
                       kg_size: int) -> int:
     """PE budget per step with only kg_size output channels computed."""
     cap = hw.nbop_pe // (spec.nb_op_value * kg_size)

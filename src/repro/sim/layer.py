@@ -20,8 +20,12 @@ class ConvLayer:
 
     def __post_init__(self):
         s = self.spec
-        assert self.input.shape == (s.c_in, s.h_in, s.w_in), self.input.shape
-        assert self.kernels.shape == (s.n_kernels, s.c_in, s.h_k, s.w_k)
+        if self.input.shape != (s.c_in, s.h_in, s.w_in):
+            raise ValueError(f"input shape {self.input.shape} != spec "
+                             f"{(s.c_in, s.h_in, s.w_in)}")
+        if self.kernels.shape != (s.n_kernels, s.c_in, s.h_k, s.w_k):
+            raise ValueError(f"kernel shape {self.kernels.shape} != spec "
+                             f"{(s.n_kernels, s.c_in, s.h_k, s.w_k)}")
 
     @classmethod
     def random(cls, spec: ConvSpec, seed: int = 0) -> "ConvLayer":

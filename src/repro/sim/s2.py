@@ -32,7 +32,8 @@ class S2Report:
 def run_s2(layer: ConvLayer, hw: HardwareModel,
            strategy: S2Strategy) -> S2Report:
     spec = layer.spec
-    assert spec is strategy.spec or spec == strategy.spec
+    if not (spec is strategy.spec or spec == strategy.spec):
+        raise ValueError("strategy spec does not match layer spec")
     kelem = spec.c_in * spec.h_k * spec.w_k
     out = np.full((spec.c_out, spec.h_out, spec.w_out), np.nan, np.float32)
     written = np.zeros((spec.c_out, spec.h_out, spec.w_out), bool)

@@ -24,6 +24,11 @@ from repro.sim.layer import ConvLayer
 from repro.sim.trace import StepTrace
 
 
+class StateMismatchError(RuntimeError):
+    """Formal step semantics (Def 2) disagreed with the functional memory
+    model mid-run — always a simulator or strategy-lowering bug."""
+
+
 @dataclasses.dataclass
 class SimReport:
     output: np.ndarray
@@ -85,12 +90,12 @@ class System:
                 acc.mem.check_capacity()
             # formal semantics must agree with the functional memory state
             formal = apply_step(formal, s)
-            assert set(spec.pixels_of_mask(formal.inp)) == \
-                set(acc.mem.pixels), f"step {idx}: input state mismatch"
-            assert set(spec.pixels_of_mask(formal.ker)) == \
-                set(acc.mem.kernels), f"step {idx}: kernel state mismatch"
-            assert set(spec.pixels_of_mask(formal.out)) == \
-                set(acc.mem.outputs), f"step {idx}: output state mismatch"
+            if set(spec.pixels_of_mask(formal.inp)) != set(acc.mem.pixels):
+                raise StateMismatchError(f"step {idx}: input state mismatch")
+            if set(spec.pixels_of_mask(formal.ker)) != set(acc.mem.kernels):
+                raise StateMismatchError(f"step {idx}: kernel state mismatch")
+            if set(spec.pixels_of_mask(formal.out)) != set(acc.mem.outputs):
+                raise StateMismatchError(f"step {idx}: output state mismatch")
             total_duration += step_duration(s, spec, self.hw)
             traces.append(StepTrace(
                 index=idx, step=s, mem_elements=acc.mem.used,

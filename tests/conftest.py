@@ -12,7 +12,12 @@ import os
 
 import pytest
 
-from repro.core import solver, strategies_s2
+# Every plan the suite builds is statically verified (ISSUE 6): the
+# planners re-check their own output against repro.analysis.verifier and
+# raise PlanVerificationError on any error-severity diagnostic.
+os.environ.setdefault("REPRO_VERIFY_PLANS", "1")
+
+from repro.core import solver, strategies_s2  # noqa: E402
 
 _MAX_ITERS = 1_500
 _MAX_RESTARTS = 2

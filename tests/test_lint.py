@@ -1,0 +1,114 @@
+"""Repo lint (ISSUE 6): each AST rule fires on a minimal violating file,
+the pragma suppressions work, and — the actual CI gate — the repo's own
+``src/repro`` tree is clean."""
+import pathlib
+import textwrap
+
+from repro.analysis.lint import main, run_lint
+
+BAD_SOURCE = textwrap.dedent('''
+    import dataclasses
+    import functools
+    import random
+    import numpy as np
+
+
+    @dataclasses.dataclass(frozen=True)
+    class Frozen:
+        x: float = 0.0
+
+        def mutate(self):
+            self.x = 1.0                       # L001
+
+        def __post_init__(self):
+            object.__setattr__(self, "x", 2.0)  # allowed
+
+
+    def compare(duration, other):
+        ok = duration == 0                     # allowed: emptiness guard
+        return ok or duration != other         # L002
+
+
+    def draw():
+        a = random.random()                    # L003
+        b = np.random.rand(3)                  # L003
+        rng = np.random.default_rng(0)         # allowed: seeded
+        det = random.Random(7)                 # allowed: seeded
+        return a, b, rng, det
+
+
+    @functools.lru_cache
+    def cached(xs: list):                      # L004
+        return len(xs)
+
+
+    def guard(total_duration):
+        assert total_duration >= 0             # L006 (under core/)
+        return total_duration
+
+
+    def dead_api():                            # L005: never referenced
+        return 1
+
+
+    def pinned_api():  # lint: public-api
+        return 2
+
+
+    USES = (Frozen, Frozen.mutate, compare, draw, cached, guard)
+''')
+
+
+def _lint_bad(tmp_path) -> dict[str, list]:
+    bad = tmp_path / "core" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text(BAD_SOURCE)
+    findings = run_lint([bad], base=tmp_path)
+    by_rule: dict[str, list] = {}
+    for f in findings:
+        by_rule.setdefault(f.rule.split(" ")[0], []).append(f)
+    return by_rule
+
+
+def test_every_rule_fires_on_the_bad_file(tmp_path):
+    by_rule = _lint_bad(tmp_path)
+    assert set(by_rule) == {"L001", "L002", "L003", "L004", "L005", "L006"}
+    assert "self.x" in by_rule["L001"][0].message
+    assert len(by_rule["L002"]) == 1           # the ==0 guard is allowed
+    assert len(by_rule["L003"]) == 2           # seeded calls are allowed
+    assert "cached" in by_rule["L004"][0].message
+    assert [f.message for f in by_rule["L005"]] \
+        and all("dead_api" in f.message for f in by_rule["L005"])
+    assert len(by_rule["L006"]) == 1
+
+
+def test_pragma_suppresses_dead_api(tmp_path):
+    by_rule = _lint_bad(tmp_path)
+    assert not any("pinned_api" in f.message for f in by_rule["L005"])
+
+
+def test_asserts_outside_core_and_sim_are_allowed(tmp_path):
+    k = tmp_path / "kernels" / "dev.py"
+    k.parent.mkdir()
+    k.write_text("def f(x):\n    assert x.ndim == 2\n    return x\n")
+    assert run_lint([k], base=tmp_path) == []
+
+
+def test_findings_render_with_path_and_line(tmp_path):
+    by_rule = _lint_bad(tmp_path)
+    f = by_rule["L006"][0]
+    assert f.render().startswith(f"core/bad.py:{f.line}: L006")
+    assert f.to_json()["rule"].startswith("L006")
+
+
+def test_repo_source_tree_is_clean():
+    """The CI gate: src/repro (with benchmarks/ + examples/ as the L005
+    usage universe) lints clean."""
+    assert main([]) == 0
+
+
+def test_parse_error_is_reported_not_raised(tmp_path):
+    bad = tmp_path / "oops.py"
+    bad.write_text("def broken(:\n")
+    findings = run_lint([bad], base=tmp_path)
+    assert findings and findings[0].rule.startswith("L000")

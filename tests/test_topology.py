@@ -116,6 +116,19 @@ def test_ring_collectives_match_pr3_formulas():
     assert ring.bcast(1, 1000) == 0
 
 
+def test_reduce_scatter_experimental_pricing_pinned():
+    """``Topology.reduce_scatter`` is explicitly experimental — no planner
+    mode emits it yet (input-channel sharding is ROADMAP work) — but its
+    pricing is pinned here so the formula cannot drift before it is wired
+    in: the standard ring algorithm's bottleneck equals the gather's on
+    every topology shape."""
+    for topo in (Topology("ring"), Topology("ring", bidirectional=True),
+                 Topology("torus", (2, 2)), Topology("torus", (2, 4))):
+        for n in (2, 4, 8):
+            for a in (1, 37, 1000):
+                assert topo.reduce_scatter(n, a) == topo.gather(n, a)
+
+
 def test_biring_halves_collectives():
     bi = Topology("ring", bidirectional=True)
     assert bi.gather(4, 1000) == 375            # ceil(750 / 2)

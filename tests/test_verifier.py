@@ -1,0 +1,337 @@
+"""Static plan verifier (ISSUE 6): every plan the planners emit passes
+with zero error-severity diagnostics, every rule family fires on a
+hand-corrupted plan, and the ``verify=`` / ``REPRO_VERIFY_PLANS``
+postcondition wiring is pinned.  Hypothesis twins live in
+``test_verifier_props.py``."""
+import dataclasses
+import os
+
+import pytest
+
+from repro.analysis import (PlanVerificationError, Severity, verify_steps)
+from repro.analysis.verifier import (assert_verified, should_verify,
+                                     strategy_floor, verify_multichip_plan,
+                                     verify_network_plan)
+from repro.configs import tight
+from repro.configs.clusters import TOPOLOGY_PRESETS, make_cluster
+from repro.configs.networks import NETWORKS
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.formalism import Step
+from repro.core.multichip import plan_multichip_network
+from repro.core.network_planner import (InfeasibleNetworkError, plan_network)
+from repro.core.strategies import row_by_row
+
+HW = HardwareModel(nbop_pe=10 ** 9, size_mem=None)
+
+SMALL_NET = (ConvSpec(1, 10, 10, 2, 3, 3),
+             ConvSpec(2, 8, 8, 4, 3, 3),
+             ConvSpec(2, 8, 8, 4, 3, 3))
+
+TINY = ConvSpec(1, 4, 4, 1, 3, 3)            # 4 patches, 16 pixels
+
+FAST = dict(polish_iters=300, polish_restarts=1)
+
+TIGHT_BUDGET = max(s.kernel_elements for s in tight.LAYERS) // 2
+
+
+def _plan_small():
+    # REPRO_VERIFY_PLANS=1 (conftest) already asserts the postcondition
+    return plan_network(SMALL_NET, HW, **FAST)
+
+
+# --------------------------------------------------------------------- #
+# Positive sweep: emitted plans carry zero error diagnostics
+# --------------------------------------------------------------------- #
+
+def test_suite_runs_with_verification_enabled():
+    """conftest turns the planners' postcondition on for the whole suite:
+    every plan any test builds re-checks itself."""
+    assert os.environ.get("REPRO_VERIFY_PLANS") == "1"
+    assert should_verify(None) is True
+    assert should_verify(False) is False
+
+
+@pytest.mark.parametrize("name", ["tight2", "tight4"])
+def test_network_plans_verify_clean_across_budgets(name):
+    """Single-chip plans across the S1 -> S2 crossover budgets: the
+    verifier's step walk, budget ledger, floors and reuse clamps all hold
+    on real planner output."""
+    specs = NETWORKS[name]
+    checked = 0
+    for size_mem in [None] + tight.budget_points(specs):
+        hw = HardwareModel(nbop_pe=10 ** 9, size_mem=size_mem)
+        try:
+            plan = plan_network(specs, hw, **FAST)
+        except InfeasibleNetworkError:
+            continue
+        report = verify_network_plan(plan)
+        assert report.ok, report.render()
+        assert not report.errors
+        assert report.checked_steps > 0
+        checked += 1
+    assert checked >= 2
+
+
+@pytest.mark.parametrize("topology", sorted(TOPOLOGY_PRESETS))
+def test_multichip_plans_verify_clean(topology):
+    """Sharded cluster plans on every preset topology (with the overlap
+    and same_pad refinements on): shard grids, ICI conservation and the
+    total recomposition all verify."""
+    preset = TOPOLOGY_PRESETS[topology]
+    cluster = make_cluster(preset.n_chips, size_mem=TIGHT_BUDGET,
+                           topology=preset.topo)
+    plan = plan_multichip_network(tight.LAYERS, cluster, overlap=True,
+                                  same_pad=True, **FAST)
+    report = verify_multichip_plan(plan)
+    assert report.ok, report.render()
+    assert report.checked_layers == len(tight.LAYERS)
+    assert plan.n_sharded_layers >= 1       # the sweep exercises shards
+
+
+def test_one_chip_delegation_verifies():
+    cluster = make_cluster(1, size_mem=TIGHT_BUDGET)
+    plan = plan_multichip_network(tight.LAYERS_SMALL, cluster, **FAST)
+    assert plan.network_plan is not None
+    report = verify_multichip_plan(plan)
+    assert report.ok, report.render()
+
+
+def test_assert_verified_returns_report_and_rejects_unknown():
+    report = assert_verified(_plan_small())
+    assert report.ok
+    with pytest.raises(TypeError):
+        assert_verified(object())
+
+
+# --------------------------------------------------------------------- #
+# Step-level negative tests: raw corrupted schedules
+# --------------------------------------------------------------------- #
+
+def _legal_steps(spec=TINY, p=2):
+    return list(row_by_row(spec, p).to_steps())
+
+
+def test_clean_steps_verify_ok():
+    report = verify_steps(TINY, HW, _legal_steps())
+    assert report.ok and not report.diagnostics
+
+
+def test_free_before_load_is_a_semantics_error():
+    steps = [Step(f_inp=1)] + _legal_steps()
+    report = verify_steps(TINY, HW, steps)
+    assert not report.ok
+    assert "step/semantics" in report.rules_fired()
+
+
+def test_compute_without_kernels_resident():
+    """S1 Property 1: computing with no kernel loaded is infeasible."""
+    pix = TINY.patch_masks[0]
+    steps = [Step(i_slice=pix, out=1, group=(0,))]
+    report = verify_steps(TINY, HW, steps)
+    assert "step/compute" in report.rules_fired()
+
+
+def test_double_write_back_detected():
+    steps = _legal_steps() + [Step(w=1)]
+    report = verify_steps(TINY, HW, steps)
+    assert not report.ok
+    assert "cover/write-exactly-once" in report.rules_fired()
+
+
+def test_truncated_schedule_misses_coverage():
+    steps = _legal_steps()[:-1]
+    report = verify_steps(TINY, HW, steps)
+    rules = report.rules_fired()
+    assert "cover/outputs" in rules
+    assert "cover/memory-empty" in rules
+
+
+def test_over_budget_step_detected():
+    tiny_hw = HardwareModel(nbop_pe=10 ** 9, size_mem=TINY.kernel_elements)
+    report = verify_steps(TINY, tiny_hw, _legal_steps())
+    assert not report.ok
+    assert "mem/step-budget" in report.rules_fired()
+    d = next(d for d in report.errors if d.rule == "mem/step-budget")
+    assert dict(d.data)["size_mem"] == TINY.kernel_elements
+
+
+def test_bad_kernel_grouping_detected():
+    spec = dataclasses.replace(TINY, n_kernels=2)
+    report = verify_steps(spec, HW, _legal_steps(spec),
+                          kernel_groups=((0,),))   # kernel 1 unassigned
+    assert "cover/outputs" in report.rules_fired()
+
+
+# --------------------------------------------------------------------- #
+# Plan-level negative tests: dataclasses.replace-corrupted plans
+# --------------------------------------------------------------------- #
+
+def _with_layer(plan, i, **changes):
+    layers = list(plan.layers)
+    layers[i] = dataclasses.replace(layers[i], **changes)
+    return dataclasses.replace(plan, layers=tuple(layers))
+
+
+def test_corrupt_total_duration_fires_plan_total():
+    plan = dataclasses.replace(_plan_small(),
+                               total_duration=_plan_small().total_duration + 1)
+    report = verify_network_plan(plan)
+    assert not report.ok
+    assert "plan/total" in report.rules_fired()
+
+
+def test_corrupt_gross_duration_fires_ledger():
+    plan = _plan_small()
+    bad = _with_layer(plan, 0,
+                      gross_duration=plan.layers[0].gross_duration + 3.0)
+    report = verify_network_plan(bad)
+    assert "dur/ledger" in report.rules_fired()
+
+
+def test_duration_below_floor_fires_floor_rule():
+    plan = _plan_small()
+    floor = strategy_floor(plan.layers[0].strategy, plan.hw)
+    bad = _with_layer(plan, 0, gross_duration=floor - 5.0)
+    report = verify_network_plan(bad)
+    assert "dur/floor" in report.rules_fired()
+
+
+def test_savings_without_source_fires_clamp():
+    plan = _plan_small()
+    bad = _with_layer(plan, 0, reuse_input=False, window_rows=0,
+                      input_load_saved=1.0)
+    report = verify_network_plan(bad)
+    assert "reuse/savings-clamp" in report.rules_fired()
+
+
+def test_unpaired_reuse_fires_pairing():
+    plan = _plan_small()
+    lp0 = plan.layers[0]
+    bad = _with_layer(plan, 0, reuse_output=not lp0.reuse_output)
+    report = verify_network_plan(bad)
+    assert "reuse/pairing" in report.rules_fired()
+
+
+def test_bad_row_window_fires_window_rule():
+    plan = _plan_small()
+    bad = _with_layer(plan, 1, window_rows=plan.layers[1].spec.h_in + 3)
+    report = verify_network_plan(bad)
+    assert "reuse/window" in report.rules_fired()
+
+
+def test_postcondition_raises_with_report():
+    plan = dataclasses.replace(_plan_small(), total_duration=-1.0)
+    with pytest.raises(PlanVerificationError) as exc:
+        assert_verified(plan)
+    assert "plan/total" in exc.value.report.rules_fired()
+    assert exc.value.report.errors
+
+
+# --------------------------------------------------------------------- #
+# Multi-chip negative tests
+# --------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def mc_plan():
+    cluster = make_cluster(4, size_mem=TIGHT_BUDGET)
+    return plan_multichip_network(tight.LAYERS, cluster,
+                                  polish_iters=300, polish_restarts=1)
+
+
+def _row_layer_index(plan):
+    for i, lp in enumerate(plan.layers):
+        if lp.mode == "row":
+            return i
+    pytest.skip("no row-sharded layer in this plan")
+
+
+def test_mc_corrupt_final_gather_fires_conservation(mc_plan):
+    bad = dataclasses.replace(
+        mc_plan, final_gather_duration=mc_plan.final_gather_duration + 1)
+    report = verify_multichip_plan(bad)
+    assert "ici/conservation" in report.rules_fired()
+
+
+def test_mc_corrupt_total_fires_plan_total(mc_plan):
+    bad = dataclasses.replace(mc_plan,
+                              total_duration=mc_plan.total_duration + 1)
+    report = verify_multichip_plan(bad)
+    assert "plan/total" in report.rules_fired()
+
+
+def test_mc_corrupt_ici_elements_fires_conservation(mc_plan):
+    i = _row_layer_index(mc_plan)
+    bad = _with_layer(mc_plan, i,
+                      ici_elements=mc_plan.layers[i].ici_elements + 7)
+    report = verify_multichip_plan(bad)
+    assert "ici/conservation" in report.rules_fired()
+
+
+def test_mc_overlapping_bands_fire_tiling(mc_plan):
+    i = _row_layer_index(mc_plan)
+    lp = mc_plan.layers[i]
+    shards = list(lp.shards)
+    r0, r1 = shards[0].out_rows
+    shards[0] = dataclasses.replace(shards[0], out_rows=(r0 + 1, r1 + 1))
+    bad = _with_layer(mc_plan, i, shards=tuple(shards))
+    report = verify_multichip_plan(bad)
+    assert "shard/band-tiling" in report.rules_fired()
+
+
+def test_mc_band_outside_input_fires_halo_source(mc_plan):
+    i = _row_layer_index(mc_plan)
+    lp = mc_plan.layers[i]
+    shards = sorted(lp.shards, key=lambda s: s.out_rows)
+    last = shards[-1]
+    r0, r1 = last.out_rows
+    shards[-1] = dataclasses.replace(last, out_rows=(r0 + 2, r1 + 2))
+    bad = _with_layer(mc_plan, i, shards=tuple(shards))
+    report = verify_multichip_plan(bad)
+    assert "shard/halo-source" in report.rules_fired()
+
+
+def test_mc_corrupt_compute_duration_fires_ledger(mc_plan):
+    i = _row_layer_index(mc_plan)
+    bad = _with_layer(mc_plan, i,
+                      compute_duration=mc_plan.layers[i].compute_duration + 1)
+    report = verify_multichip_plan(bad)
+    assert "dur/ledger" in report.rules_fired()
+
+
+def test_mc_sharded_savings_fire_clamp(mc_plan):
+    i = _row_layer_index(mc_plan)
+    bad = _with_layer(mc_plan, i, savings=0.5)
+    report = verify_multichip_plan(bad)
+    assert "reuse/savings-clamp" in report.rules_fired()
+
+
+def test_mc_shard_pad_over_cap_fires_clamp(mc_plan):
+    i = _row_layer_index(mc_plan)
+    lp = mc_plan.layers[i]
+    shards = list(lp.shards)
+    shards[0] = dataclasses.replace(shards[0], pad_saved=10 ** 9)
+    bad = _with_layer(mc_plan, i, shards=tuple(shards))
+    report = verify_multichip_plan(bad)
+    assert "shard/pad-clamp" in report.rules_fired()
+
+
+def test_mc_war_overlap_warning_is_not_an_error():
+    """Inflating a row stage's ICI duration past the consumers' first
+    halo use makes the overlap claim optimistic: the WAR rule must fire
+    as a WARNING (self-consistent accounting, optimistic wall-clock),
+    never flip report.ok by itself."""
+    cluster = make_cluster(4, size_mem=TIGHT_BUDGET)
+    plan = plan_multichip_network(tight.LAYERS, cluster, overlap=True,
+                                  polish_iters=300, polish_restarts=1)
+    rows = [i for i in range(1, plan.n_layers)
+            if plan.layers[i].mode == "row"
+            and plan.layers[i - 1].mode == "row"
+            and plan.layers[i].ici_elements > 0]
+    if not rows:
+        pytest.skip("no consecutive row stages with halo traffic")
+    report = verify_multichip_plan(plan)
+    assert report.ok, report.render()
+    for d in report.diagnostics:
+        if d.rule == "ici/war-overlap":
+            assert d.severity is Severity.WARNING
