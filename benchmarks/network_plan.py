@@ -53,6 +53,7 @@ import os
 import sys
 import time
 
+from repro.analysis import kerncheck
 from repro.analysis.diagnostics import PlanVerificationError
 from repro.analysis.verifier import assert_verified
 from repro.configs.clusters import make_cluster, torus_dims
@@ -113,6 +114,17 @@ def _verify_plan(plan) -> bool:
     except PlanVerificationError as e:
         print(f"[verify] FAIL:\n{e.report.render()}", file=sys.stderr)
         return False
+
+
+def _kerncheck_clean(networks: list[str]) -> bool:
+    """Kernel-contract postcondition (repro.analysis.kerncheck): every
+    benchmarked network's emitted Pallas kernels are statically proven
+    contract-equivalent to their plans.  A False is an emitter or
+    kernel bug, and the run fails."""
+    report = kerncheck.run_all(sorted(networks))
+    if not report.ok:
+        print(f"[kerncheck] FAIL:\n{report.render()}", file=sys.stderr)
+    return report.ok
 
 
 def _lru_stats() -> dict:
@@ -305,13 +317,15 @@ def _all_verifier_clean(rows: list[dict], chip_sweeps: list[dict],
 def write_bench_summary(path: str, rows: list[dict],
                         chip_sweeps: list[dict],
                         sweeps: list[dict] | None = None,
-                        profile: dict | None = None) -> None:
+                        profile: dict | None = None,
+                        kerncheck_clean: bool = True) -> None:
     """Stable repo-root summary: the perf-trajectory file other PRs diff.
     ``planner_seconds`` and ``gain_vs_pr3`` are the stable trajectory
     keys (baseline: the frozen ``PR3_BASELINE`` table)."""
     summary = {
         "benchmark": "network_plan",
         "verifier_clean": _all_verifier_clean(rows, chip_sweeps, sweeps),
+        "kerncheck_clean": kerncheck_clean,
         "networks": [
             {"network": r["network"],
              "feasible": r["feasible"],
@@ -465,10 +479,12 @@ def main(argv=None) -> int:
         }
 
     verifier_clean = _all_verifier_clean(rows, chip_sweeps, sweeps)
+    kerncheck_clean = _kerncheck_clean(networks)
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
               "verifier_clean": verifier_clean,
+              "kerncheck_clean": kerncheck_clean,
               "networks": rows,
               "tight_memory_sweep": sweeps,
               "chip_sweep": chip_sweeps}
@@ -481,7 +497,8 @@ def main(argv=None) -> int:
         json.dump(result, f, indent=1)
     if trajectory_grade:
         write_bench_summary(args.bench_out, rows, chip_sweeps,
-                            sweeps=sweeps, profile=profile)
+                            sweeps=sweeps, profile=profile,
+                            kerncheck_clean=kerncheck_clean)
 
     for r in rows:
         if not r["feasible"]:
@@ -533,7 +550,10 @@ def main(argv=None) -> int:
     if not verifier_clean:
         print("[verify] at least one emitted plan failed static "
               "verification — planner/cost-model bug", file=sys.stderr)
-    ok = verifier_clean
+    if not kerncheck_clean:
+        print("[kerncheck] at least one emitted kernel failed the "
+              "contract check — emitter/kernel bug", file=sys.stderr)
+    ok = verifier_clean and kerncheck_clean
     ok = ok and all(r["feasible"] and r["beats_baseline"] for r in rows)
     # the sweep must stay feasible and beat greedy on >= 1 budget point
     for sw in sweeps:

@@ -26,10 +26,11 @@ ruff's job; these are semantic):
     Suppress deliberate API with a ``# lint: public-api`` pragma, or
     mark a not-yet-wired entry point ``# lint: experimental-api``.
 ``L006 bare-assert``
-    ``assert`` in ``core/`` or ``sim/``: planner/simulator invariants
-    vanish under ``python -O`` — raise an explicit exception instead.
-    (``kernels/`` and ``models/`` keep device-side shape asserts: they
-    guard tracer shapes, not plan legality.)
+    ``assert`` in ``core/``, ``sim/`` or ``kernels/``: planner,
+    simulator and kernel-wrapper invariants vanish under ``python -O``
+    — raise an explicit exception (``KernelShapeError`` for kernel
+    geometry) instead.  (``models/`` keeps device-side shape asserts:
+    they guard tracer shapes, not plan legality.)
 
 Exit code 0 when clean, 1 when any finding fires — CI-ready.
 """
@@ -236,7 +237,7 @@ def _check_lru_mutable(tree: ast.Module, rel: str,
 def _check_bare_assert(tree: ast.Module, rel: str, lines: list[str],
                        out: list[Finding]) -> None:
     parts = pathlib.PurePath(rel).parts
-    if not ("core" in parts or "sim" in parts):
+    if not ("core" in parts or "sim" in parts or "kernels" in parts):
         return
     for node in ast.walk(tree):
         if isinstance(node, ast.Assert) and not _has_pragma(

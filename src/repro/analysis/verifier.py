@@ -33,8 +33,11 @@ Rule families (see README for the full table):
                        ``same_pad`` savings must respect their clamps
 ``ici/conservation``   plan's ICI element counts differ from the
                        topology's re-priced collective schedule
-``ici/war-overlap``    ``overlap=True`` halo exchange delivers rows after
-                       the consumer first reads them (optimistic overlap)
+``ici/war-overlap``    an overlapped halo exchange delivers rows after the
+                       consumer first reads them — a write-after-read on
+                       live input, proved/refuted per band through the
+                       ``analysis.access`` timed-delivery model (ERROR:
+                       the planner claims it only overlaps sound stages)
 =====================  ====================================================
 
 The verifier is intentionally conservative in the same places the
@@ -50,6 +53,7 @@ import math
 import os
 from typing import Sequence
 
+from repro.analysis import access
 from repro.analysis.diagnostics import (Diagnostic, PlanVerificationError,
                                         Severity, VerificationReport)
 from repro.core import multichip as mc
@@ -530,52 +534,61 @@ def _shard_spec_mismatch(report: VerificationReport, layer: int,
             f"sub-convolution {want}", layer=layer, chip=shard.chip))
 
 
-def _halo_mask(spec: ConvSpec) -> int:
-    """Pixel mask of a shard's inbound halo: the last ``h_k - s_h`` rows
-    of its local input window (bands whose window extends into the next
-    band's rows; the grid's last band has no lower neighbour)."""
-    halo_rows = max(0, spec.h_k - spec.s_h)
-    mask = 0
-    for h in range(spec.h_in - halo_rows, spec.h_in):
-        mask |= ((1 << spec.w_in) - 1) << (h * spec.w_in)
-    return mask
-
-
 def _check_overlap_war(report: VerificationReport, layer: int,
                        lp: mc.MultiChipLayerPlan,
                        walks: "dict[int, StepWalk]") -> None:
-    """``overlap=True`` prices a stage at max(compute, ICI): the inbound
-    halo streams while the consumer computes.  If a consumer shard's
-    first *use* of its halo rows happens before the exchange can have
-    delivered them, the double-buffering claim is optimistic — flag it
-    (WARNING: the plan stays self-consistent, the wall-clock would not)."""
+    """An overlapped stage prices at max(compute, ICI): the inbound halo
+    streams while the consumer computes.  The halo rows are live input —
+    a band that reads them before the exchange can have delivered them
+    has a write-after-read hazard, and the overlap claim is unsound.
+
+    Precise verdict through the happens-before timing model
+    (:mod:`repro.analysis.access`): the exchange is one timed transfer
+    completing at ``ici_duration`` into each receiving band's halo rows;
+    every step that touches those rows is a timed read at its Def-3
+    start offset.  Since the planner only marks a stage overlapped after
+    proving the window safe (``core.multichip.halo_first_use``), any
+    violation here is a planner soundness bug — an ERROR, no longer an
+    advisory warning."""
     bands = sorted((s.out_rows, s) for s in lp.shards
                    if s.out_rows is not None)
     last_r1 = bands[-1][0][1] if bands else None
     for (r0, r1), shard in bands:
         if r1 == last_r1:
             continue                      # bottom band: no lower neighbour
-        halo = _halo_mask(shard.spec)
-        if not halo:
+        sspec = shard.spec
+        halo_rows = max(0, sspec.h_k - sspec.s_h)
+        if halo_rows == 0:
             continue
         walk = walks.get(shard.chip)
         if walk is None or walk.aborted:
             continue
+        tensor = f"chip{shard.chip}/x"
+        dst = access.box_region(
+            tensor, (sspec.h_in - halo_rows, sspec.h_in),
+            (0, sspec.w_in))
+        reads = []
         t = 0.0
-        t_use = None
         for dur, s in zip(walk.durations, shard.strategy.to_steps()):
-            if s.i_slice & halo:
-                t_use = t
-                break
+            if s.i_slice:
+                lo_row = ((s.i_slice & -s.i_slice).bit_length() - 1) \
+                    // sspec.w_in
+                hi_row = (s.i_slice.bit_length() - 1) // sspec.w_in + 1
+                reads.append((t, access.box_region(
+                    tensor, (lo_row, hi_row), (0, sspec.w_in))))
             t += dur
-        if t_use is not None and t_use + _ABS < lp.ici_duration:
+        v = access.first_violation_or_none(
+            [(lp.ici_duration, dst)], reads)
+        if v is not None:
             report.add(Diagnostic.make(
-                "ici/war-overlap", Severity.WARNING,
-                f"halo rows first read at t={t_use:g} but the overlapped "
-                f"exchange completes at t={lp.ici_duration:g}; "
-                f"max(compute, ICI) is optimistic for this stage",
+                "ici/war-overlap", Severity.ERROR,
+                f"overlapped halo exchange completes at "
+                f"t={v.complete_time:g} but the band reads its halo rows "
+                f"at t={v.read_time:g} — write-after-read on the live "
+                f"input window; this stage cannot price "
+                f"max(compute, ICI)",
                 layer=layer, chip=shard.chip,
-                first_use=t_use, ici_duration=lp.ici_duration))
+                first_use=v.read_time, ici_duration=lp.ici_duration))
 
 
 def verify_multichip_plan(plan: mc.MultiChipPlan) -> VerificationReport:

@@ -61,7 +61,16 @@ than the ring plan of the same network.  With
 under compute (the Stoutchinin et al. halo-cascade discipline,
 arXiv:1902.01492, and the same double-buffering our Def-3 HBM accounting
 already assumes), so a stage costs ``max(compute, ICI)``; the final
-gather has no compute to hide under and stays serial.  Resharding is
+gather has no compute to hide under and stays serial.  A row->row halo
+exchange writes rows the consumer already holds live, so its overlap
+claim is only made when sound: the DP prices it overlapped only if
+every receiving band's first halo read (:func:`halo_first_use`, Def-3
+timed) lands after the exchange completes — trying a zigzag-swapped
+band variant that reads the halo last when the solved schedule reads
+too early — and otherwise serialises that stage (per-layer
+``MultiChipLayerPlan.overlap`` flags record the verdict, and
+``analysis.verifier``'s ``ici/war-overlap`` rule re-proves it as a hard
+ERROR).  Resharding is
 charged whenever consecutive layers pick modes whose activation layouts
 differ (see ``_transition_elements``); the mode sequence is chosen by a
 small Viterbi-style dynamic program over (layer, mode) states, so a cheap
@@ -99,11 +108,13 @@ import dataclasses
 import time
 from typing import Sequence
 
+from repro.core import formalism
 from repro.core import solver as solver_mod
 from repro.core.conv_spec import ConvSpec
-from repro.core.cost_model import ClusterModel
+from repro.core.cost_model import ClusterModel, HardwareModel
 from repro.core.network_planner import (InfeasibleNetworkError, NetworkPlan,
                                         plan_network, resolve_group_size)
+from repro.core.strategies import GroupedStrategy, zigzag
 
 MODES = ("replicate", "row", "channel")
 HYBRID_MODES = MODES + ("hybrid",)
@@ -328,6 +339,50 @@ def halo_elements(spec: ConvSpec) -> int:
     return max(0, spec.h_k - spec.s_h) * spec.w_in * spec.c_in
 
 
+def halo_pixel_mask(spec: ConvSpec) -> int:
+    """Pixel mask of a band shard's inbound halo: the last
+    ``max(0, h_k - s_h)`` rows of its local input window — the rows a
+    row->row transition delivers from the chip below."""
+    halo_rows = max(0, spec.h_k - spec.s_h)
+    mask = 0
+    for h in range(spec.h_in - halo_rows, spec.h_in):
+        mask |= ((1 << spec.w_in) - 1) << (h * spec.w_in)
+    return mask
+
+
+def halo_first_use(strategy, spec: ConvSpec, hw: HardwareModel) -> float:
+    """Def-3 time a shard schedule computes before its first step loads
+    a halo pixel — the window an overlapped inbound halo exchange can
+    stream in without a write-after-read on the live input.  ``inf``
+    when the schedule never reads the halo (or there is none); ``0.0``
+    for non-grouped (S2) strategies, whose kernel-swap interleaving the
+    timing model does not cover — conservatively never overlap-safe."""
+    mask = halo_pixel_mask(spec)
+    if not mask:
+        return float("inf")
+    if not isinstance(strategy, GroupedStrategy):
+        return 0.0
+    t = 0.0
+    for s in strategy.to_steps():
+        if s.i_slice & mask:
+            return t
+        t += formalism.step_duration(s, spec, hw)
+    return float("inf")
+
+
+def _halo_safe_time(shards: Sequence["ShardPlan"],
+                    hw: HardwareModel) -> float:
+    """Earliest halo first-use across the bands that receive one (every
+    band but the bottom); ``inf`` when no band ever reads its halo."""
+    bands = [s for s in shards if s.out_rows is not None]
+    if not bands:
+        return float("inf")
+    last_r1 = max(s.out_rows[1] for s in bands)
+    return min((halo_first_use(s.strategy, s.spec, hw)
+                for s in bands if s.out_rows[1] != last_r1),
+               default=float("inf"))
+
+
 # --------------------------------------------------------------------- #
 # ICI pricing: activation layouts and resharding
 # --------------------------------------------------------------------- #
@@ -452,7 +507,11 @@ class MultiChipLayerPlan:
     ici_elements: int                    # bottleneck-link elements, inbound
     ici_duration: float
     savings: float = 0.0                 # 1-chip path: inter-layer reuse
-    overlap: bool = False                # double-buffered halo exchange
+    overlap: bool = False                # this stage's inbound ICI is
+    #   double-buffered under compute; for halo exchanges the planner
+    #   only sets it after proving the bands read their halo late enough
+    #   (halo_first_use), so serial-priced stages can coexist in an
+    #   overlap=True plan
     grid: tuple[int, int] | None = None  # hybrid: (rows, cols) shard grid
 
     def __post_init__(self):
@@ -490,7 +549,8 @@ class MultiChipPlan:
     planning_seconds: float
     solver_calls: int
     cache_hits: int
-    overlap: bool = False                # ICI hidden under compute
+    overlap: bool = False                # overlap requested; each layer's
+    #   own flag records whether its stage actually overlapped
     balance_rows: bool = False           # duration-balanced band heights
 
     @property
@@ -572,20 +632,71 @@ class _ModeEval:
     shards: tuple[ShardPlan, ...]
     compute_duration: float
     grid: tuple[int, int] | None = None  # hybrid shard grid
+    halo_safe: float = float("inf")      # earliest halo read across bands
+    alt: "_ModeEval | None" = None       # zigzag-swapped overlap variant
 
     @property
     def layout(self) -> str:
         return _produced_layout(self.mode, len(self.shards), self.grid)
 
 
+def _zigzag_swapped(shards: Sequence[ShardPlan], spec: ConvSpec,
+                    hw: HardwareModel, same_pad: bool,
+                    nb_data_reload: int) -> "tuple[ShardPlan, ...] | None":
+    """Variant of a row eval with every halo-receiving band re-solved as
+    a plain zigzag sweep: the sweep reads its input top to bottom, so
+    the halo rows (the window's last rows) are read last, maximising
+    the overlap-safe window.  ``None`` when nothing changes or a swap
+    would break the memory budget."""
+    bands = [s for s in shards if s.out_rows is not None]
+    if not bands:
+        return None
+    last_r1 = max(s.out_rows[1] for s in bands)
+    new: list[ShardPlan] = []
+    changed = False
+    for s in shards:
+        if s.out_rows is None or s.out_rows[1] == last_r1 \
+                or not isinstance(s.strategy, GroupedStrategy):
+            new.append(s)
+            continue
+        zz = zigzag(s.spec, s.p)
+        if zz.groups == s.strategy.groups:
+            new.append(s)
+            continue
+        if hw.size_mem is not None and \
+                zz.peak_footprint_elements() > hw.size_mem:
+            return None
+        obj = zz.objective(hw)
+        res = dataclasses.replace(
+            s.result, strategy=zz, objective=obj, polish_objective=obj,
+            milp_status="overlap-swap", milp_objective=None,
+            reload_ok=zz.max_reloads() <= nb_data_reload)
+        saved = 0.0
+        if same_pad:
+            r0, r1 = s.out_rows
+            saved = _band_pad_saving(spec, r0, r1, hw,
+                                     zz.first_load_duration(hw))
+        new.append(dataclasses.replace(
+            s, result=res, gross_duration=zz.full_duration(hw) - saved,
+            pad_saved=saved))
+        changed = True
+    if not changed:
+        return None
+    return tuple(new)
+
+
 def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
                max_group: int | None, solve_kwargs: dict,
                balance_rows: bool = False,
                same_pad: bool = False,
+               overlap: bool = False,
                ) -> _ModeEval | None:
     """Solve every shard of ``spec`` under ``mode`` through the LRU-cached
     solver; None when any shard fits no strategy family or the mode does
-    not apply (hybrid off-torus, or a hybrid grid the layer can't fill)."""
+    not apply (hybrid off-torus, or a hybrid grid the layer can't fill).
+    With ``overlap``, row evals also carry their halo-safety window
+    (:func:`_halo_safe_time`) and, when it helps, a zigzag-swapped
+    alternative whose bands read the halo later."""
     hw = cluster.chip
     grid = None
     if mode == "replicate":
@@ -645,9 +756,22 @@ def _eval_mode(spec: ConvSpec, mode: str, cluster: ClusterModel,
             out_rows=band, kernel_range=krange,
             gross_duration=res.strategy.full_duration(hw) - saved,
             pad_saved=saved))
+    halo_safe, alt = float("inf"), None
+    if overlap and mode == "row":
+        halo_safe = _halo_safe_time(shards, hw)
+        swapped = _zigzag_swapped(shards, spec, hw, same_pad,
+                                  solve_kwargs.get("nb_data_reload", 2))
+        if swapped is not None:
+            alt_safe = _halo_safe_time(swapped, hw)
+            if alt_safe > halo_safe:
+                alt = _ModeEval(
+                    mode=mode, shards=swapped,
+                    compute_duration=max(s.gross_duration
+                                         for s in swapped),
+                    grid=grid, halo_safe=alt_safe)
     return _ModeEval(mode=mode, shards=tuple(shards),
                      compute_duration=max(s.gross_duration for s in shards),
-                     grid=grid)
+                     grid=grid, halo_safe=halo_safe, alt=alt)
 
 
 def ici_schedule(specs: Sequence[ConvSpec], modes: Sequence[str],
@@ -713,6 +837,12 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     against compute — per-layer duration ``max(compute, ICI)`` instead of
     ``compute + ICI`` (the halo/reshard of stage l streams while stage
     l-1's band is still computing; only the final gather stays serial).
+    Halo exchanges between consecutive row-sharded layers only get the
+    overlapped price when the receiving bands provably read their halo
+    rows after the exchange can have delivered them (WAR-free by
+    ``halo_first_use`` timing); unsound stages are re-solved with
+    halo-last zigzag bands or serialised, whichever is cheaper, and each
+    layer's ``overlap`` flag records what was actually priced.
     ``balance_rows=True`` sizes row bands by solved per-chip *duration*
     (:func:`balanced_row_heights`) instead of raw row counts.
     ``same_pad=True`` asserts the already-padded inputs are SAME padding,
@@ -786,7 +916,8 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         layer_evals = {}
         for mode in modes:
             ev = _eval_mode(spec, mode, cluster, max_group, solve_kwargs,
-                            balance_rows=balance_rows, same_pad=same_pad)
+                            balance_rows=balance_rows, same_pad=same_pad,
+                            overlap=overlap)
             if ev is not None:
                 layer_evals[mode] = ev
         if not layer_evals:
@@ -803,37 +934,64 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     t_ici = cluster.t_ici
     # cost[mode] = best total through layer i ending in this mode
     cost: dict[str, float] = {}
-    back: list[dict[str, tuple[str | None, int]]] = []
+    back: list[dict[str, tuple[str | None, int, str]]] = []
     for i, layer_evals in enumerate(evals):
         nxt_cost: dict[str, float] = {}
-        choices: dict[str, tuple[str | None, int]] = {}
+        choices: dict[str, tuple[str | None, int, str]] = {}
         # resharding moves the consumer's (post-pooling) input map — the
         # tensor that must land in the consumer's layout.
         a_full = specs[i].num_pixels * specs[i].c_in
-        def stage_cost(compute: float, elems: int) -> float:
-            """Per-layer contribution: serial (Def-3) or overlapped
-            (double-buffered halo exchange hides ICI under compute)."""
-            if overlap:
-                return max(compute, elems * t_ici)
-            return compute + elems * t_ici
+
+        def stage_price(ev: _ModeEval, elems: int,
+                        prev_layout: str) -> tuple[float, str]:
+            """(duration, variant) of this layer fed by ``elems`` inbound
+            ICI elements.  Serial Def-3 pricing by default; with
+            ``overlap``, a generic reshard hides under compute — the
+            consumer cannot start before it anyway, so max(compute, ICI)
+            is the pipeline bound — but a row->row *halo* exchange
+            writes rows the consumer already holds live, so it may only
+            overlap when every receiving band provably reads its halo
+            after the exchange can have delivered it
+            (:func:`halo_first_use`).  Otherwise the planner considers
+            the zigzag-swapped variant ('ovl-alt': bands re-solved so
+            the halo is read last) and serial pricing, picking the
+            cheaper; ``ici/war-overlap`` in ``analysis.verifier``
+            re-proves whichever claim is made."""
+            ici = elems * t_ici
+            if not overlap:
+                return ev.compute_duration + ici, "serial"
+            halo_like = (ev.mode == "row" and prev_layout == "row"
+                         and elems == halo_elements(specs[i])
+                         and elems > 0)
+            if not halo_like:
+                return max(ev.compute_duration, ici), "ovl"
+            cands = [(ev.compute_duration + ici, "serial")]
+            if ici <= ev.halo_safe + 1e-9:
+                cands.append((max(ev.compute_duration, ici), "ovl"))
+            elif ev.alt is not None and ici <= ev.alt.halo_safe + 1e-9:
+                cands.append(
+                    (max(ev.alt.compute_duration, ici), "ovl-alt"))
+            return min(cands)
 
         for mode, ev in layer_evals.items():
             if i == 0:
                 elems = _transition_elements(
                     _INPUT_LAYOUT, mode, specs[i], a_full, cluster)
-                nxt_cost[mode] = stage_cost(ev.compute_duration, elems)
-                choices[mode] = (None, elems)
+                val, variant = stage_price(ev, elems, _INPUT_LAYOUT)
+                nxt_cost[mode] = val
+                choices[mode] = (None, elems, variant)
                 continue
-            best_prev, best_val, best_elems = None, float("inf"), 0
+            best: tuple[float, str | None, int, str] = \
+                (float("inf"), None, 0, "serial")
             for pmode, pcost in cost.items():
+                prev_layout = evals[i - 1][pmode].layout
                 elems = _transition_elements(
-                    evals[i - 1][pmode].layout, mode, specs[i], a_full,
-                    cluster)
-                val = pcost + stage_cost(ev.compute_duration, elems)
-                if val < best_val:
-                    best_prev, best_val, best_elems = pmode, val, elems
-            nxt_cost[mode] = best_val
-            choices[mode] = (best_prev, best_elems)
+                    prev_layout, mode, specs[i], a_full, cluster)
+                val, variant = stage_price(ev, elems, prev_layout)
+                if pcost + val < best[0]:
+                    best = (pcost + val, pmode, elems, variant)
+            nxt_cost[mode] = best[0]
+            choices[mode] = (best[1], best[2], best[3])
         cost = nxt_cost
         back.append(choices)
 
@@ -851,23 +1009,29 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     # 3) backtrack
     chosen: list[str] = [best_mode]
     in_elems: list[int] = []
+    variants: list[str] = []
     for i in range(len(specs) - 1, -1, -1):
-        prev_mode, elems = back[i][chosen[0]]
+        prev_mode, elems, variant = back[i][chosen[0]]
         in_elems.insert(0, elems)
+        variants.insert(0, variant)
         if i > 0:
             chosen.insert(0, prev_mode)
     planning_seconds = time.perf_counter() - t0
 
-    layers = tuple(
-        MultiChipLayerPlan(
+    def _layer(i: int) -> MultiChipLayerPlan:
+        ev = evals[i][chosen[i]]
+        if variants[i] == "ovl-alt":
+            ev = ev.alt
+        return MultiChipLayerPlan(
             index=i, spec=specs[i], mode=chosen[i],
-            shards=evals[i][chosen[i]].shards,
-            compute_duration=evals[i][chosen[i]].compute_duration,
+            shards=ev.shards,
+            compute_duration=ev.compute_duration,
             ici_elements=in_elems[i],
             ici_duration=in_elems[i] * t_ici,
-            overlap=overlap,
-            grid=evals[i][chosen[i]].grid)
-        for i in range(len(specs)))
+            overlap=variants[i] != "serial",
+            grid=ev.grid)
+
+    layers = tuple(_layer(i) for i in range(len(specs)))
 
     single = None
     if include_single_chip_baseline:

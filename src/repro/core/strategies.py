@@ -31,6 +31,29 @@ Groups = list[tuple[int, ...]]
 
 
 @dataclasses.dataclass(frozen=True)
+class GridMeta:
+    """A grouped strategy recognised as a Pallas grid sweep.
+
+    The S1 conv kernels iterate a ``(h_out, w_out // t_run)`` grid, one
+    row-run of ``t_run`` output columns per step, rows top-to-bottom and
+    column tiles in ``order`` ("zigzag" alternates direction per row,
+    "row" restarts at the left edge).  When
+    :meth:`GroupedStrategy.as_grid` returns this, the strategy's step
+    sequence is *exactly* the kernel's grid order and
+    ``kernels.emit.emit_layer_kernel`` can execute the plan.
+    """
+
+    order: str                  # "zigzag" | "row"
+    t_run: int
+    h_out: int
+    w_out_tiles: int
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.h_out, self.w_out_tiles)
+
+
+@dataclasses.dataclass(frozen=True)
 class GroupedStrategy:
     """An ordered partition of patches into compute groups."""
 
@@ -58,6 +81,41 @@ class GroupedStrategy:
 
     def max_group_size(self) -> int:
         return max(len(g) for g in self.groups)
+
+    def as_grid(self) -> GridMeta | None:
+        """Recognise this strategy as a kernel grid sweep, if it is one.
+
+        Requires every group to be one row-run of a uniform ``t_run``
+        dividing ``w_out``, with the runs visited in zigzag or row order
+        (zigzag preferred when both match, e.g. ``h_out == 1``).
+        Within-group patch order is irrelevant — steps are built from
+        group *masks* — so groups are compared as sets.  Returns None
+        for anything else (tiled/hilbert groups, ragged runs), which the
+        emitter reports as a non-emitable plan.
+        """
+        spec = self.spec
+        t = len(self.groups[0])
+        if any(len(g) != t for g in self.groups):
+            return None
+        if spec.w_out % t != 0:
+            return None
+        tiles = spec.w_out // t
+        if len(self.groups) != spec.h_out * tiles:
+            return None
+        got = [tuple(sorted(g)) for g in self.groups]
+        for order in ("zigzag", "row"):
+            want = []
+            for i in range(spec.h_out):
+                cols = range(tiles)
+                if order == "zigzag" and i % 2 == 1:
+                    cols = reversed(cols)
+                for jt in cols:
+                    want.append(tuple(spec.patch_id(i, jt * t + u)
+                                      for u in range(t)))
+            if got == want:
+                return GridMeta(order=order, t_run=t, h_out=spec.h_out,
+                                w_out_tiles=tiles)
+        return None
 
     # ------------------------------------------------------------------ #
     def to_steps(self) -> list[Step]:

@@ -25,6 +25,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import KernelShapeError
+
+
+def matmul_grid(m: int, n: int, k: int, *, bm: int, bn: int, bk: int,
+                order: str):
+    """Grid + BlockSpec index_maps for a given loop order.
+
+    Shared by :func:`block_matmul` and the static checker
+    (:mod:`repro.analysis.kerncheck`), which evaluates the maps on
+    concrete grid indices.  Returns ``(grid, amap, bmap, cmap, axis)``.
+    """
+    if sorted(order) != ["k", "m", "n"]:
+        raise KernelShapeError(f"order {order!r} must permute 'mnk'")
+    if k <= 0 or m % bm or n % bn or k % bk:
+        raise KernelShapeError(
+            f"tiles ({bm},{bn},{bk}) must divide dims ({m},{n},{k}) "
+            f"(ops.matmul pads)")
+    trip = {"m": m // bm, "n": n // bn, "k": k // bk}
+    grid = tuple(trip[d] for d in order)
+    axis = {d: i for i, d in enumerate(order)}
+
+    def amap(*ids):
+        return (ids[axis["m"]], ids[axis["k"]])
+
+    def bmap(*ids):
+        return (ids[axis["k"]], ids[axis["n"]])
+
+    def cmap(*ids):
+        return (ids[axis["m"]], ids[axis["n"]])
+
+    return grid, amap, bmap, cmap, axis
+
 
 def _mm_kernel_osta(a_ref, b_ref, o_ref, acc_ref, *, k_axis: int,
                     k_tiles: int):
@@ -71,21 +103,11 @@ def block_matmul(a: jax.Array, b: jax.Array, *,
     """
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
-    m_t, n_t, k_t = m // bm, n // bn, k // bk
-    trip = {"m": m_t, "n": n_t, "k": k_t}
-    grid = tuple(trip[d] for d in order)
-    axis = {d: i for i, d in enumerate(order)}
-
-    def amap(*ids):
-        return (ids[axis["m"]], ids[axis["k"]])
-
-    def bmap(*ids):
-        return (ids[axis["k"]], ids[axis["n"]])
-
-    def cmap(*ids):
-        return (ids[axis["m"]], ids[axis["n"]])
-
+    if k != k2:
+        raise KernelShapeError(f"A has k={k} but B has k={k2}")
+    grid, amap, bmap, cmap, axis = matmul_grid(
+        m, n, k, bm=bm, bn=bn, bk=bk, order=order)
+    k_t = k // bk
     dim_sem = tuple("arbitrary" if d == "k" else "parallel" for d in order)
     k_inner = order[2] == "k"
     if k_inner:

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: S1 convolution offloading (paper Sec 4 on TPU).
+"""Pallas TPU kernels: S1 convolution offloading (paper Sec 4 on TPU).
 
 Strategy S1, faithfully mapped to the TPU memory hierarchy:
 
@@ -17,6 +17,25 @@ Strategy S1, faithfully mapped to the TPU memory hierarchy:
   * **W / write-back** — the step's (C_out, 1, T) output block leaves VMEM
     when the grid moves on — action a3.
 
+Two variants share the geometry helpers below (which
+``repro.analysis.kerncheck`` also evaluates on concrete grid indices to
+derive each kernel's static access trace):
+
+* :func:`conv2d_offload` — the simple seed kernel: every step DMAs its
+  *full* ``(C_in, H_K, t_in)`` window and blocks on the copy.  Correct,
+  but it re-fetches the ``w_k - s_w`` columns (and, across rows, the
+  ``h_k - s_h`` rows) shared with the previous step — traffic the plan's
+  Def-3 ``I_slice`` accounting does *not* charge.
+* :func:`conv2d_offload_planned` — the plan-shaped kernel
+  ``kernels.emit`` maps ``LayerPlan``s onto: the window stays resident in
+  VMEM and each step DMAs only its **I_slice delta** (new columns within
+  a row, new rows at a zigzag row turn), *prefetched* one step ahead into
+  a separate delta buffer so the copy overlaps the previous step's MXU
+  work.  Double-buffering is exactly the part that is easy to get subtly
+  wrong (a dropped wait, a prefetch aimed at the live window), which is
+  why ``kerncheck`` proves its DMA trace hazard-free and its per-step
+  regions equal to the plan's I_slices before the kernel is trusted.
+
 The MAC loop is an im2col-in-VMEM followed by one MXU ``jnp.dot``:
 (T, C_in*H_K*W_K) x (C_in*H_K*W_K, C_out).  On real hardware T and C_out
 should be padded to MXU lanes (multiples of 128); ``ops.conv2d`` handles
@@ -31,16 +50,83 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import KernelShapeError
+
+# Step cases of the planned kernel (shared with the static checker).
+CASE_FULL = "full"          # DMA the whole window (first step / no overlap)
+CASE_ROW = "row-delta"      # zigzag row turn: fetch the s_h new rows
+CASE_COL = "col-delta"      # within-row move: fetch the t_run*s_w new cols
+
+# Semaphore slots of the planned kernel's DMA semaphore array.
+SEM_FULL, SEM_ROW, SEM_COL = 0, 1, 2
+
+
+# --------------------------------------------------------------------- #
+# Shared grid geometry (evaluated on tracers in-kernel, on ints by the
+# static checker — keep everything branch-free arithmetic over i/jt).
+# --------------------------------------------------------------------- #
+
+def t_in_cols(t_run: int, s_w: int, w_k: int) -> int:
+    """Input columns covered by a ``t_run``-patch row-run."""
+    return (t_run - 1) * s_w + w_k
+
+
+def eff_tile(i, jt, w_out_tiles: int, zigzag: bool):
+    """Physical column-tile index of grid step ``(i, jt)``.
+
+    Zigzag reverses odd rows; the arithmetic form works for both Python
+    ints (checker) and traced values (kernel)."""
+    if not zigzag:
+        return jt
+    return jt + (i % 2) * (w_out_tiles - 1 - 2 * jt)
+
+
+def moving_right(i, zigzag: bool):
+    """Whether within-row steps of row ``i`` advance left-to-right."""
+    if not zigzag:
+        return True
+    return i % 2 == 0
+
+
+def grid_sequence(h_out: int, w_out_tiles: int):
+    """The Pallas grid's sequential step order: last axis fastest."""
+    return [(i, jt) for i in range(h_out) for jt in range(w_out_tiles)]
+
+
+def step_case(i: int, jt: int, *, t_run: int, s_h: int, s_w: int,
+              h_k: int, w_k: int, w_out_tiles: int, order: str) -> str:
+    """Which I_slice the planned kernel fetches at grid step ``(i, jt)``.
+
+    Concrete-index form of the kernel's ``pl.when`` structure: the first
+    step and any step whose window is disjoint from its predecessor's
+    fetch the full window; a zigzag row turn (same column window, one
+    stride down) fetches only the new rows; a within-row move fetches
+    only the new columns.  Row order with more than one column tile jumps
+    back to the row's left edge at each turn — a (mostly) disjoint
+    window, fetched in full."""
+    zig = order == "zigzag"
+    if i == 0 and jt == 0:
+        return CASE_FULL
+    if jt == 0:                                   # row turn
+        if (zig or w_out_tiles == 1) and h_k > s_h:
+            return CASE_ROW
+        return CASE_FULL
+    if t_in_cols(t_run, s_w, w_k) > t_run * s_w:  # windows share columns
+        return CASE_COL
+    return CASE_FULL
+
+
+# --------------------------------------------------------------------- #
+# Seed kernel: full window DMA every step
+# --------------------------------------------------------------------- #
 
 def _conv_kernel(x_hbm, w_ref, o_ref, win_buf, sem, *,
                  t_run: int, s_h: int, s_w: int, h_k: int, w_k: int,
                  w_out_tiles: int, zigzag: bool):
     """One S1 step: DMA the input window, im2col in VMEM, one MXU dot."""
     i = pl.program_id(0)            # output row
-    jt = pl.program_id(1)           # column-run index (possibly zigzagged)
-    if zigzag:
-        jt = jnp.where(i % 2 == 1, w_out_tiles - 1 - jt, jt)
-    t_in = (t_run - 1) * s_w + w_k
+    jt = eff_tile(i, pl.program_id(1), w_out_tiles, zigzag)
+    t_in = t_in_cols(t_run, s_w, w_k)
 
     # a4: load I_slice — the (C_in, H_K, t_in) window — into VMEM.
     cp = pltpu.make_async_copy(
@@ -49,14 +135,18 @@ def _conv_kernel(x_hbm, w_ref, o_ref, win_buf, sem, *,
     cp.start()
     cp.wait()
 
-    # im2col in VMEM: (T, C_in*H_K*W_K)
-    win = win_buf[...]
-    cols = [win[:, :, t * s_w:t * s_w + w_k].reshape(-1) for t in range(t_run)]
-    patches = jnp.stack(cols, axis=0)
+    _im2col_dot(win_buf, w_ref, o_ref, t_run=t_run, s_w=s_w, w_k=w_k)
 
-    # a6: one MXU matmul against the resident kernels (C_in*Hk*Wk, C_out).
-    # (f32 upcast: XLA:CPU interpret mode lacks a bf16 dot thunk; on TPU the
-    # MXU consumes bf16 directly and this cast fuses away.)
+
+def _im2col_dot(win_buf, w_ref, o_ref, *, t_run: int, s_w: int, w_k: int):
+    """im2col in VMEM then one MXU matmul against the resident kernels.
+
+    (f32 upcast: XLA:CPU interpret mode lacks a bf16 dot thunk; on TPU the
+    MXU consumes bf16 directly and this cast fuses away.)"""
+    win = win_buf[...]
+    cols = [win[:, :, t * s_w:t * s_w + w_k].reshape(-1)
+            for t in range(t_run)]
+    patches = jnp.stack(cols, axis=0)            # (T, C_in*Hk*Wk)
     out = jnp.dot(patches.astype(jnp.float32),
                   w_ref[...].astype(jnp.float32),
                   preferred_element_type=jnp.float32)
@@ -64,11 +154,37 @@ def _conv_kernel(x_hbm, w_ref, o_ref, win_buf, sem, *,
     o_ref[...] = out.T[:, None, :].astype(o_ref.dtype)
 
 
+def _conv_geometry(x: jax.Array, w: jax.Array, t_run: int,
+                   s_h: int, s_w: int) -> tuple[int, int, int, int, int]:
+    """Validate shapes; return (n, h_k, w_k, h_out, w_out_tiles)."""
+    c_in, h_in, w_in = x.shape
+    n, c_in2, h_k, w_k = w.shape
+    if c_in != c_in2:
+        raise KernelShapeError(
+            f"input has {c_in} channels but kernels expect {c_in2}")
+    h_out = (h_in - h_k) // s_h + 1
+    w_out = (w_in - w_k) // s_w + 1
+    if h_out <= 0 or w_out <= 0:
+        raise KernelShapeError(
+            f"kernel {h_k}x{w_k} does not fit input {h_in}x{w_in}")
+    if t_run <= 0 or w_out % t_run != 0:
+        raise KernelShapeError(
+            f"t_run={t_run} must divide w_out={w_out} "
+            f"(ops.conv2d pads/chooses for you)")
+    return n, h_k, w_k, h_out, w_out // t_run
+
+
+def _out_index_map(w_out_tiles: int, zigzag: bool):
+    def out_index(i, jt):
+        return (0, i, eff_tile(i, jt, w_out_tiles, zigzag))
+    return out_index
+
+
 def conv2d_offload(x: jax.Array, w: jax.Array, *,
                    t_run: int, s_h: int = 1, s_w: int = 1,
                    order: str = "zigzag",
                    interpret: bool = True) -> jax.Array:
-    """S1 Pallas convolution.
+    """S1 Pallas convolution (full-window DMA per step).
 
     Args:
       x: input (C_in, H_in, W_in) — already padded (paper Remark 2).
@@ -77,22 +193,10 @@ def conv2d_offload(x: jax.Array, w: jax.Array, *,
         (``ops.conv2d`` pads/chooses for you).
       order: "zigzag" (paper Sec 7.2) or "row" grid sweep.
     """
-    c_in, h_in, w_in = x.shape
-    n, c_in2, h_k, w_k = w.shape
-    assert c_in == c_in2
-    h_out = (h_in - h_k) // s_h + 1
-    w_out = (w_in - w_k) // s_w + 1
-    assert w_out % t_run == 0, (w_out, t_run)
-    w_out_tiles = w_out // t_run
-    t_in = (t_run - 1) * s_w + w_k
+    c_in = x.shape[0]
+    n, h_k, w_k, h_out, w_out_tiles = _conv_geometry(x, w, t_run, s_h, s_w)
+    t_in = t_in_cols(t_run, s_w, w_k)
     w_mat = w.reshape(n, -1).T          # (C_in*Hk*Wk, N)
-
-    if order == "zigzag":
-        def out_index(i, jt):
-            return (0, i, jnp.where(i % 2 == 1, w_out_tiles - 1 - jt, jt))
-    else:
-        def out_index(i, jt):
-            return (0, i, jt)
 
     kernel = functools.partial(
         _conv_kernel, t_run=t_run, s_h=s_h, s_w=s_w, h_k=h_k, w_k=w_k,
@@ -102,11 +206,161 @@ def conv2d_offload(x: jax.Array, w: jax.Array, *,
         grid=(h_out, w_out_tiles),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),               # x stays in HBM
-            pl.BlockSpec((c_in * h_k * w_k, n), lambda i, jt: (0, 0)),  # Λ resident
+            pl.BlockSpec((c_in * h_k * w_k, n), lambda i, jt: (0, 0)),  # Λ
         ],
-        out_specs=pl.BlockSpec((n, 1, t_run), out_index),
-        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out), x.dtype),
+        out_specs=pl.BlockSpec((n, 1, t_run),
+                               _out_index_map(w_out_tiles,
+                                              order == "zigzag")),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out_tiles * t_run),
+                                       x.dtype),
         scratch_shapes=[pltpu.VMEM((c_in, h_k, t_in), x.dtype),
                         pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(x, w_mat)
+
+
+# --------------------------------------------------------------------- #
+# Planned kernel: resident window + prefetched I_slice deltas
+# --------------------------------------------------------------------- #
+
+def _conv_planned_kernel(x_hbm, w_ref, o_ref, win_buf, col_buf, row_buf,
+                         sems, *,
+                         t_run: int, s_h: int, s_w: int, h_k: int,
+                         w_k: int, h_out: int, w_out_tiles: int,
+                         zigzag: bool):
+    """One plan step: retire the prefetched delta, update the resident
+    window, prefetch the next step's delta, then im2col + MXU dot."""
+    i = pl.program_id(0)
+    jt_raw = pl.program_id(1)
+    tiles = w_out_tiles
+    jt = eff_tile(i, jt_raw, tiles, zigzag)
+    t_in = t_in_cols(t_run, s_w, w_k)
+    nw = t_run * s_w                    # new columns per within-row move
+    ov_w = t_in - nw                    # columns shared with the neighbour
+    keep_rows = h_k - s_h               # rows shared across a row turn
+    row_delta = (zigzag or tiles == 1) and keep_rows > 0
+    col_delta = ov_w > 0
+
+    h0 = i * s_h
+    w0 = jt * nw
+    first = (i == 0) & (jt_raw == 0)
+    rowchg = (jt_raw == 0) & (i > 0)
+    within = jt_raw > 0
+
+    full_cond = first
+    if not row_delta:
+        full_cond = full_cond | rowchg
+    if not col_delta:
+        full_cond = full_cond | within
+
+    @pl.when(full_cond)
+    def _full():
+        # No usable overlap with the previous window: synchronous fetch
+        # of the whole (C_in, H_K, t_in) box.
+        cp = pltpu.make_async_copy(
+            x_hbm.at[:, pl.ds(h0, h_k), pl.ds(w0, t_in)],
+            win_buf, sems.at[SEM_FULL])
+        cp.start()
+        cp.wait()
+
+    if row_delta:
+        @pl.when(rowchg)
+        def _row():
+            # Retire the row prefetch issued one step ago, shift the kept
+            # rows up, splice the s_h new rows in at the bottom.
+            pltpu.make_async_copy(
+                x_hbm.at[:, pl.ds(h0 + keep_rows, s_h), pl.ds(w0, t_in)],
+                row_buf, sems.at[SEM_ROW]).wait()
+            kept = win_buf[:, s_h:, :]
+            win_buf[:, :keep_rows, :] = kept
+            win_buf[:, keep_rows:, :] = row_buf[...]
+
+    if col_delta:
+        @pl.when(within)
+        def _col():
+            # Retire the column prefetch, slide the kept ov_w columns to
+            # their position in the new window, splice the delta in.
+            right = moving_right(i, zigzag)
+            delta_off = ov_w * right        # right: [ov_w, t_in); left: [0, nw)
+            pltpu.make_async_copy(
+                x_hbm.at[:, pl.ds(h0, h_k), pl.ds(w0 + delta_off, nw)],
+                col_buf, sems.at[SEM_COL]).wait()
+            kept = win_buf[:, :, pl.ds(nw * right, ov_w)]
+            win_buf[:, :, pl.ds(nw * (1 - right), ov_w)] = kept
+            win_buf[:, :, pl.ds(delta_off, nw)] = col_buf[...]
+
+    # Prefetch the NEXT step's delta while this step computes — the
+    # double-buffering whose soundness kerncheck proves (the copy writes
+    # col_buf/row_buf, never the win_buf this step still reads).
+    is_last = (i == h_out - 1) & (jt_raw == tiles - 1)
+    nxt_turn = jt_raw == tiles - 1
+    i_n = i + nxt_turn
+    jt_n = eff_tile(i_n, (jt_raw + 1) * (1 - nxt_turn), tiles, zigzag)
+    h0_n = i_n * s_h
+    w0_n = jt_n * nw
+
+    if row_delta:
+        @pl.when((~is_last) & nxt_turn)
+        def _prefetch_row():
+            pltpu.make_async_copy(
+                x_hbm.at[:, pl.ds(h0_n + keep_rows, s_h),
+                         pl.ds(w0_n, t_in)],
+                row_buf, sems.at[SEM_ROW]).start()
+
+    if col_delta:
+        @pl.when((~is_last) & (~nxt_turn))
+        def _prefetch_col():
+            delta_off_n = ov_w * moving_right(i_n, zigzag)
+            pltpu.make_async_copy(
+                x_hbm.at[:, pl.ds(h0_n, h_k), pl.ds(w0_n + delta_off_n, nw)],
+                col_buf, sems.at[SEM_COL]).start()
+
+    _im2col_dot(win_buf, w_ref, o_ref, t_run=t_run, s_w=s_w, w_k=w_k)
+
+
+def conv2d_offload_planned(x: jax.Array, w: jax.Array, *,
+                           t_run: int, s_h: int = 1, s_w: int = 1,
+                           order: str = "zigzag",
+                           interpret: bool = True) -> jax.Array:
+    """Plan-shaped S1 Pallas convolution: per-step DMA == plan I_slice.
+
+    Same arguments and result as :func:`conv2d_offload`; the difference
+    is the traffic contract — each grid step fetches exactly the pixels
+    the corresponding ``GroupedStrategy`` step charges to ``t_l`` (the
+    window overlap with the previous step stays resident in VMEM), and
+    the fetch is prefetched one step ahead.  ``kernels.emit`` maps
+    ``LayerPlan``s here; ``repro.analysis.kerncheck`` proves the
+    equivalence statically.
+    """
+    if order not in ("zigzag", "row"):
+        raise KernelShapeError(f"unknown grid order {order!r}")
+    c_in = x.shape[0]
+    n, h_k, w_k, h_out, w_out_tiles = _conv_geometry(x, w, t_run, s_h, s_w)
+    t_in = t_in_cols(t_run, s_w, w_k)
+    nw = t_run * s_w
+    w_mat = w.reshape(n, -1).T
+
+    kernel = functools.partial(
+        _conv_planned_kernel, t_run=t_run, s_h=s_h, s_w=s_w, h_k=h_k,
+        w_k=w_k, h_out=h_out, w_out_tiles=w_out_tiles,
+        zigzag=(order == "zigzag"))
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out, w_out_tiles),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),               # x stays in HBM
+            pl.BlockSpec((c_in * h_k * w_k, n), lambda i, jt: (0, 0)),  # Λ
+        ],
+        out_specs=pl.BlockSpec((n, 1, t_run),
+                               _out_index_map(w_out_tiles,
+                                              order == "zigzag")),
+        out_shape=jax.ShapeDtypeStruct((n, h_out, w_out_tiles * t_run),
+                                       x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((c_in, h_k, t_in), x.dtype),          # resident window
+            pltpu.VMEM((c_in, h_k, nw), x.dtype),            # column delta
+            pltpu.VMEM((c_in, max(1, min(s_h, h_k)), t_in), x.dtype),
+            pltpu.SemaphoreType.DMA((3,)),
+        ],
         interpret=interpret,
     )(x, w_mat)

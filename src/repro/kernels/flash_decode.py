@@ -24,7 +24,32 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import KernelShapeError
+
 _NEG_INF = -1e30
+
+
+def decode_specs(g: int, d: int, s: int, bkv: int):
+    """Grid + index_maps of the decode schedule, shared with the static
+    checker: q and the output block are resident (constant maps), K/V
+    stream one disjoint ``bkv`` block per step."""
+    if d <= 0 or s <= 0 or bkv <= 0 or s % bkv:
+        raise KernelShapeError(
+            f"KV length {s} must be a positive multiple of bkv={bkv} "
+            f"(ops.decode_attention pads)")
+    kv_tiles = s // bkv
+    grid = (kv_tiles,)
+
+    def qmap(i, *_):
+        return (0, 0)
+
+    def kvmap(i, *_):
+        return (i, 0)
+
+    def omap(i, *_):
+        return (0, 0)
+
+    return grid, qmap, kvmap, omap
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
@@ -67,7 +92,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """q (G, D), k/v (S, D), optional valid ``length`` -> (G, D)."""
     g, d = q.shape
     s, d2 = k.shape
-    assert d == d2 and s % bkv == 0, (s, bkv)
+    if d != d2:
+        raise KernelShapeError(f"q has head dim {d} but k has {d2}")
+    grid, qmap, kvmap, omap = decode_specs(g, d, s, bkv)
     kv_tiles = s // bkv
     if length is None:
         length = s
@@ -77,13 +104,13 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         scale=1.0 / (d ** 0.5))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(kv_tiles,),
+        grid=grid,
         in_specs=[
-            pl.BlockSpec((g, d), lambda i, *_: (0, 0)),      # q resident (Λ)
-            pl.BlockSpec((bkv, d), lambda i, *_: (i, 0)),    # K patch group
-            pl.BlockSpec((bkv, d), lambda i, *_: (i, 0)),    # V patch group
+            pl.BlockSpec((g, d), qmap),      # q resident (Λ)
+            pl.BlockSpec((bkv, d), kvmap),   # K patch group
+            pl.BlockSpec((bkv, d), kvmap),   # V patch group
         ],
-        out_specs=pl.BlockSpec((g, d), lambda i, *_: (0, 0)),
+        out_specs=pl.BlockSpec((g, d), omap),
         scratch_shapes=[pltpu.VMEM((g, d), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32),
                         pltpu.VMEM((g, 1), jnp.float32)])

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import planner
+from repro.kernels import KernelShapeError
 from repro.kernels import block_matmul as _bm
 from repro.kernels import conv2d_offload as _conv
 from repro.kernels import flash_decode as _fd
@@ -83,7 +84,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     b, h_q, d = q.shape
     _, s, h_kv, _ = k.shape
-    assert h_q % h_kv == 0
+    if h_q % h_kv != 0:
+        raise KernelShapeError(
+            f"GQA needs h_q={h_q} divisible by h_kv={h_kv}")
     g = h_q // h_kv
     if bkv is None:
         p = planner.plan_decode_attention(s, d, g, q.dtype.itemsize)

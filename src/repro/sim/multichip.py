@@ -22,8 +22,9 @@ reconciliation discipline matches ``sim.network``:
     per-layer ICI charges equal an independent re-pricing of the chosen
     mode sequence (``core.multichip.ici_schedule`` — topology-priced
     collectives), and the total recomposes from the *measured* shard
-    durations under the plan's discipline — ``max(compute, ICI)`` per
-    stage when ``plan.overlap``, ``compute + ICI`` otherwise;
+    durations under each stage's own discipline — ``max(compute, ICI)``
+    when the layer's ``overlap`` flag is set (the planner proved the
+    exchange WAR-free), ``compute + ICI`` otherwise;
   * ``peak_within_budget`` — every shard's *measured* peak stays within
     the per-chip ``size_mem``;
   * ICI transfers themselves are analytic (the bottleneck-link element
@@ -89,9 +90,11 @@ class MultiChipSimReport:
         """Per-shard sim == plan gross + pad_saved (edge bands' skipped
         padding-row loads are analytic), per-layer compute == max shard,
         the plan's ICI charges match an independent re-pricing, and the
-        total recomposes from *measured* shard durations under the plan's
-        overlap discipline (``max(compute, ICI)`` per stage when
-        ``plan.overlap``, ``compute + ICI`` otherwise)."""
+        total recomposes from *measured* shard durations under each
+        stage's own discipline (``max(compute, ICI)`` when the layer's
+        ``overlap`` flag is set, ``compute + ICI`` otherwise — the
+        planner serialises halo exchanges it could not prove WAR-free,
+        so the flags can differ across layers of one plan)."""
         total = self.plan.final_gather_duration
         for reps, lp in zip(self.shard_reports, self.plan.layers):
             for r, shard in zip(reps, lp.shards):
@@ -102,7 +105,7 @@ class MultiChipSimReport:
                           for r, s in zip(reps, lp.shards))
             if abs(compute - lp.compute_duration) > 1e-9:
                 return False
-            if self.plan.overlap:
+            if lp.overlap:
                 total += max(compute, lp.ici_duration) - lp.savings
             else:
                 total += compute + lp.ici_duration - lp.savings

@@ -1,0 +1,208 @@
+"""Kernel contract checker (ISSUE 7): the symbolic trace of every
+emitted conv kernel is contract-equivalent to its plan, the standalone
+GeMM/decode schedules check clean, and every rule is provoked by a
+seeded mutation — shifted DMA region, shifted window, double write,
+dropped/extra wait, inflated occupancy or traffic — caught as a
+structured ERROR diagnostic with the right rule id."""
+import copy
+import dataclasses
+import json
+
+import pytest
+
+from repro.analysis import access, kerncheck
+from repro.analysis.kerncheck import (
+    build_conv_trace, check_block_matmul, check_conv_trace, check_decode,
+    check_network, network_budget, run_all)
+from repro.configs.networks import NETWORKS
+from repro.core.conv_spec import ConvSpec
+from repro.kernels.emit import (KernelEmitError, emit_layer_kernel,
+                                plan_emitable_network)
+
+SPECS = [ConvSpec(2, 8, 8, 3, 3, 3), ConvSpec(3, 6, 6, 4, 3, 3)]
+
+
+@pytest.fixture(scope="module")
+def emitted_layer():
+    """(trace, strategy, budget) of a real emitted layer, to mutate."""
+    hw = network_budget(SPECS)
+    plan = plan_emitable_network(SPECS, hw, name="mini")
+    lp = plan.layers[0]
+    trace = build_conv_trace(emit_layer_kernel(lp))
+    return trace, lp.strategy, hw.size_mem
+
+
+def _rules(diags):
+    return {d.rule for d in diags}
+
+
+def _shift_box(region: access.Region, axis: int, by: int) -> access.Region:
+    box = list(region.box)
+    lo, hi = box[axis]
+    box[axis] = (lo + by, hi + by)
+    return access.Region(region.tensor, tuple(box))
+
+
+# --------------------------------------------------------------------- #
+# Positive: every registered network proves clean
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", sorted(NETWORKS))
+def test_registered_network_checks_clean(name):
+    report = check_network(name)
+    assert report.ok, report.render()
+    assert report.checked_layers == len(NETWORKS[name])
+    assert report.checked_steps > 0
+
+
+def test_clean_trace_has_no_diagnostics(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    assert check_conv_trace(trace, strategy, budget, layer=0) == []
+
+
+def test_run_all_covers_networks_and_standalone_kernels():
+    report = run_all(["tight2"])
+    assert report.ok, report.render()
+    assert report.checked_layers == len(NETWORKS["tight2"])
+
+
+def test_cli_exit_codes(capsys):
+    assert kerncheck.main(["--network", "tight2"]) == 0
+    assert "OK" in capsys.readouterr().out
+    assert kerncheck.main(["--network", "tight2", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["ok"] is True
+
+
+# --------------------------------------------------------------------- #
+# Seeded mutations: one per rule, each caught with the precise rule id
+# --------------------------------------------------------------------- #
+
+def test_shifted_dma_region_fires_step_islice(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    k = len(bad.steps) // 2
+    bad.steps[k] = dataclasses.replace(
+        bad.steps[k], x_load=_shift_box(bad.steps[k].x_load, 2, 1))
+    assert "kern/step-islice" in _rules(
+        check_conv_trace(bad, strategy, budget, layer=0))
+
+
+def test_shifted_window_fires_residency(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    bad.steps[1] = dataclasses.replace(
+        bad.steps[1], window=_shift_box(bad.steps[1].window, 1, 1))
+    assert "kern/residency" in _rules(
+        check_conv_trace(bad, strategy, budget, layer=0))
+
+
+def test_shifted_output_block_fires_write_back(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    bad.steps[2] = dataclasses.replace(
+        bad.steps[2], out=bad.steps[0].out)        # double-writes block 0
+    rules = _rules(check_conv_trace(bad, strategy, budget, layer=0))
+    assert "kern/write-back" in rules
+
+
+def test_double_write_breaks_write_once_coverage(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    bad.steps[3] = dataclasses.replace(bad.steps[3], out=bad.steps[0].out)
+    diags = check_conv_trace(bad, strategy, budget, layer=0)
+    cover = [d for d in diags if d.rule == "kern/write-back"
+             and "write-once" in d.message]
+    assert cover and dict(cover[0].data)["missing"] > 0
+    assert dict(cover[0].data)["multi"] > 0
+
+
+def test_dropped_wait_fires_hazard(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    waits = [i for i, e in enumerate(bad.events)
+             if isinstance(e, access.DmaWait)]
+    del bad.events[waits[1]]
+    kinds = {dict(d.data)["kind"] for d in
+             check_conv_trace(bad, strategy, budget, layer=0)
+             if d.rule == "kern/hazard"}
+    assert kinds & {"raw", "war", "waw", "leak"}
+
+
+def test_extra_wait_fires_lost_wait(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    waits = [i for i, e in enumerate(bad.events)
+             if isinstance(e, access.DmaWait)]
+    bad.events.insert(waits[-1] + 1,
+                      access.DmaWait(bad.events[waits[-1]].sem,
+                                     bad.events[waits[-1]].step))
+    kinds = {dict(d.data)["kind"] for d in
+             check_conv_trace(bad, strategy, budget, layer=0)
+             if d.rule == "kern/hazard"}
+    assert "lost-wait" in kinds
+
+
+def test_oversized_occupancy_fires_vmem(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    bad.vmem_elements = budget + 1
+    diags = [d for d in check_conv_trace(bad, strategy, budget, layer=0)
+             if d.rule == "kern/vmem"]
+    assert diags and dict(diags[0].data)["budget"] == budget
+
+
+def test_extra_traffic_fires_conservation(emitted_layer):
+    trace, strategy, budget = emitted_layer
+    bad = copy.deepcopy(trace)
+    bad.steps[1] = dataclasses.replace(
+        bad.steps[1], lam_elements=bad.steps[1].lam_elements + 5)
+    rules = _rules(check_conv_trace(bad, strategy, budget, layer=0))
+    assert rules == {"kern/traffic"}
+
+
+def test_emit_failure_becomes_diagnostic(monkeypatch):
+    def boom(lp):
+        raise KernelEmitError(f"layer {lp.index}: no kernel")
+    monkeypatch.setattr(kerncheck, "emit_layer_kernel", boom)
+    report = check_network("mini", SPECS)
+    assert not report.ok
+    assert {d.rule for d in report.errors} == {"kern/emit"}
+
+
+# --------------------------------------------------------------------- #
+# Standalone kernels: positive + mutated schedules
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("order", ["mnk", "nmk", "kmn", "mkn"])
+def test_block_matmul_schedule_clean(order):
+    assert check_block_matmul(256, 128, 256, bm=64, bn=64, bk=64,
+                              order=order) == []
+
+
+def test_block_matmul_broken_cmap_fires_coverage(monkeypatch):
+    from repro.kernels.block_matmul import matmul_grid
+
+    def broken(m, n, k, *, bm, bn, bk, order):
+        grid, amap, bmap, _, axis = matmul_grid(m, n, k, bm=bm, bn=bn,
+                                                bk=bk, order=order)
+        return grid, amap, bmap, lambda *ids: (0, 0), axis
+    monkeypatch.setattr(kerncheck, "matmul_grid", broken)
+    diags = check_block_matmul(256, 128, 256, bm=64, bn=64, bk=64,
+                               order="mnk")
+    assert diags and _rules(diags) == {"kern/coverage"}
+
+
+def test_decode_schedule_clean():
+    assert check_decode(8, 64, 2048, bkv=256) == []
+
+
+def test_decode_repeating_kv_block_fires_coverage(monkeypatch):
+    from repro.kernels.flash_decode import decode_specs
+
+    def broken(g, d, s, bkv):
+        grid, qmap, _, omap = decode_specs(g, d, s, bkv)
+        return grid, qmap, lambda i: (0, 0), omap
+    monkeypatch.setattr(kerncheck, "decode_specs", broken)
+    diags = check_decode(8, 64, 2048, bkv=256)
+    assert diags and _rules(diags) == {"kern/coverage"}

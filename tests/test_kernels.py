@@ -5,7 +5,10 @@ import pytest
 
 from repro.core import planner
 from repro.core.conv_spec import ConvSpec
-from repro.kernels import ops, ref
+from repro.kernels import KernelShapeError, ops, ref
+from repro.kernels import block_matmul as _bm
+from repro.kernels import conv2d_offload as _conv
+from repro.kernels import flash_decode as _fd
 
 RNG = np.random.default_rng(42)
 
@@ -139,3 +142,57 @@ def test_planner_conv_prefers_wider_runs():
 def test_planner_duration_models_ordering():
     p = planner.plan_matmul(1024, 1024, 1024, dtype_bytes=2)
     assert p.duration_overlapped <= p.duration_additive
+
+
+# ----------------------- conv2d_offload_planned ----------------------- #
+
+@pytest.mark.parametrize("order", ["zigzag", "row"])
+@pytest.mark.parametrize("c_in,h,w,n,kh,kw,sh,sw,t_run", [
+    (2, 10, 12, 3, 3, 3, 1, 1, 5),     # col-delta within rows + row turns
+    (1, 9, 9, 2, 3, 3, 1, 1, 7),       # one tile per row: row-delta only
+    (2, 11, 13, 3, 3, 3, 2, 2, 3),     # strides 2: every window disjoint rows
+    (3, 12, 14, 4, 5, 3, 1, 2, 2),     # tall kernel, stride-2 columns
+    (1, 8, 8, 2, 1, 1, 1, 1, 4),       # 1x1 kernel: full fetch per tile
+    (2, 13, 11, 3, 3, 3, 3, 1, 9),     # s_h >= h_k: no row-to-row reuse
+])
+def test_conv_planned_delta_fetch_matches_ref(order, c_in, h, w, n, kh, kw,
+                                              sh, sw, t_run):
+    """The double-buffered delta-fetch kernel (the one kerncheck proves)
+    must equal the reference conv across stride/order/tile crossings —
+    the same geometry cases the static trace enumerates."""
+    x = RNG.standard_normal((c_in, h, w)).astype(np.float32)
+    k = RNG.standard_normal((n, c_in, kh, kw)).astype(np.float32)
+    out = _conv.conv2d_offload_planned(jnp.asarray(x), jnp.asarray(k),
+                                       t_run=t_run, s_h=sh, s_w=sw,
+                                       order=order, interpret=True)
+    exp = ref.conv2d(jnp.asarray(x), jnp.asarray(k), sh, sw)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_geometry_errors_are_typed():
+    """Bare asserts were replaced by KernelShapeError raises (lint L006
+    now covers kernels/): bad geometry must raise the typed error, not
+    AssertionError, and survive python -O."""
+    x = jnp.zeros((2, 8, 8), jnp.float32)
+    k = jnp.zeros((3, 2, 3, 3), jnp.float32)
+    with pytest.raises(KernelShapeError):
+        _conv.conv2d_offload_planned(x, k, t_run=4, order="spiral",
+                                     interpret=True)
+    with pytest.raises(KernelShapeError):      # t_run does not divide w_out
+        _conv.conv2d_offload_planned(x, k, t_run=4, s_w=1, s_h=1,
+                                     order="zigzag", interpret=True)
+    with pytest.raises(KernelShapeError):      # channel mismatch
+        _conv.conv2d_offload(x, jnp.zeros((3, 1, 3, 3), jnp.float32),
+                             t_run=3, interpret=True)
+    a = jnp.zeros((64, 64), jnp.float32)
+    with pytest.raises(KernelShapeError):      # tiles must divide dims
+        _bm.block_matmul(a, a, bm=48, bn=32, bk=32, order="mnk",
+                         interpret=True)
+    with pytest.raises(KernelShapeError):      # bad order permutation
+        _bm.block_matmul(a, a, bm=32, bn=32, bk=32, order="mmk",
+                         interpret=True)
+    q = jnp.zeros((4, 32), jnp.float32)
+    kv = jnp.zeros((128, 16), jnp.float32)
+    with pytest.raises(KernelShapeError):      # head-dim mismatch
+        _fd.decode_attention(q, kv, kv, jnp.int32(128), bkv=64,
+                             interpret=True)

@@ -87,11 +87,22 @@ def test_pragma_suppresses_dead_api(tmp_path):
     assert not any("pinned_api" in f.message for f in by_rule["L005"])
 
 
-def test_asserts_outside_core_and_sim_are_allowed(tmp_path):
+def test_bare_assert_in_kernels_fires_l006(tmp_path):
+    """kernels/ joined the L006 scope: wrapper-level shape checks must
+    raise KernelShapeError, not assert (asserts vanish under -O and the
+    kerncheck contract relies on typed geometry failures)."""
     k = tmp_path / "kernels" / "dev.py"
     k.parent.mkdir()
     k.write_text("def f(x):\n    assert x.ndim == 2\n    return x\n")
-    assert run_lint([k], base=tmp_path) == []
+    findings = run_lint([k], base=tmp_path)
+    assert [f.rule for f in findings] == ["L006 bare-assert"]
+
+
+def test_asserts_outside_lint_scope_are_allowed(tmp_path):
+    m = tmp_path / "models" / "net.py"
+    m.parent.mkdir()
+    m.write_text("def f(x):\n    assert x.ndim == 2\n    return x\n")
+    assert run_lint([m], base=tmp_path) == []
 
 
 def test_findings_render_with_path_and_line(tmp_path):

@@ -31,9 +31,12 @@ PR4_RING = {
     (2, False): (20669.0, "WWKK", 512, [0, 160, 512, 576]),
     (2, True): (15677.0, "WWKK", 512, [0, 160, 512, 576]),
     (4, False): (17529.0, "WWKK", 768, [0, 160, 768, 864]),
-    (4, True): (12178.0, "WWKK", 768, [0, 160, 768, 864]),
+    # overlap totals assume WAR-sound halo pricing: a row->row exchange
+    # whose receiving bands read the halo before it can arrive is
+    # serialised (4 and 8 chips: the L1 bands are too short to hide it)
+    (4, True): (12818.0, "WWKK", 768, [0, 160, 768, 864]),
     (8, False): (16209.0, "WWKK", 896, [0, 160, 896, 1008]),
-    (8, True): (12533.0, "WWKK", 896, [0, 160, 896, 1008]),
+    (8, True): (13173.0, "WWKK", 896, [0, 160, 896, 1008]),
 }
 
 

@@ -316,22 +316,43 @@ def test_mc_shard_pad_over_cap_fires_clamp(mc_plan):
     assert "shard/pad-clamp" in report.rules_fired()
 
 
-def test_mc_war_overlap_warning_is_not_an_error():
-    """Inflating a row stage's ICI duration past the consumers' first
-    halo use makes the overlap claim optimistic: the WAR rule must fire
-    as a WARNING (self-consistent accounting, optimistic wall-clock),
-    never flip report.ok by itself."""
+def test_mc_war_overlap_clean_plan_has_no_finding():
+    """The planner only marks a halo stage overlapped after proving its
+    bands read the halo late enough, so a solved overlap plan must pass
+    the precise WAR check with no ``ici/war-overlap`` diagnostic at
+    all — the rule is now a verdict, not an advisory."""
     cluster = make_cluster(4, size_mem=TIGHT_BUDGET)
     plan = plan_multichip_network(tight.LAYERS, cluster, overlap=True,
                                   polish_iters=300, polish_restarts=1)
-    rows = [i for i in range(1, plan.n_layers)
-            if plan.layers[i].mode == "row"
-            and plan.layers[i - 1].mode == "row"
-            and plan.layers[i].ici_elements > 0]
-    if not rows:
-        pytest.skip("no consecutive row stages with halo traffic")
     report = verify_multichip_plan(plan)
     assert report.ok, report.render()
-    for d in report.diagnostics:
-        if d.rule == "ici/war-overlap":
-            assert d.severity is Severity.WARNING
+    assert "ici/war-overlap" not in report.rules_fired()
+
+
+def test_mc_war_overlap_unsound_flag_is_an_error():
+    """Forcing overlap=True onto a halo stage the planner serialised
+    (its bands read the halo before the exchange can deliver it) must
+    fire ``ici/war-overlap`` as a hard ERROR from the timed-delivery
+    model."""
+    cluster = make_cluster(4, size_mem=TIGHT_BUDGET)
+    plan = plan_multichip_network(tight.LAYERS, cluster, overlap=True,
+                                  polish_iters=300, polish_restarts=1)
+    serial = [i for i in range(1, plan.n_layers)
+              if not plan.layers[i].overlap
+              and plan.layers[i].mode == "row"
+              and plan.layers[i - 1].mode == "row"
+              and plan.layers[i].ici_elements > 0]
+    if not serial:
+        pytest.skip("every halo stage was provably overlap-safe")
+    i = serial[0]
+    layers = list(plan.layers)
+    layers[i] = dataclasses.replace(layers[i], overlap=True)
+    total = sum(lp.duration for lp in layers) + plan.final_gather_duration
+    bad = dataclasses.replace(plan, layers=tuple(layers),
+                              total_duration=total)
+    report = verify_multichip_plan(bad)
+    assert "ici/war-overlap" in report.rules_fired()
+    assert not report.ok
+    sev = [d.severity for d in report.diagnostics
+           if d.rule == "ici/war-overlap"]
+    assert sev and all(s is Severity.ERROR for s in sev)
