@@ -24,7 +24,14 @@ row x channel sharding move the 4/8-chip points.
 rates (stable keys ``planner_seconds`` / ``gain_vs_pr3`` against the
 frozen ``PR3_BASELINE`` numbers) so future PRs can diff the planner-perf
 trajectory, and ``--max-planner-seconds`` turns the total planner
-wall-clock into a CI pass/fail guard.
+wall-clock into a CI pass/fail guard.  The timing itself lives in the
+``repro.obs`` metrics registry (stage timers here, per-call planner
+hooks in ``core``), and every run whose scope includes the canary
+network replays ``tight4`` on a 2x2 torus through the full
+observability loop — plan, functional simulation, kernel trace, Chrome-
+trace export, drift reconciliation (``repro.obs.report``) — pinning
+``obs_trace_valid`` / ``max_drift_elements`` into the summary and the
+exit code: predictability is a postcondition, not a hope.
 
 Full-scope runs (no ``--fast``, no ``--networks`` filter) also refresh
 ``BENCH_network_plan.json`` at the repo root — a stable, compact summary
@@ -63,6 +70,9 @@ from repro.core import solver
 from repro.core.cost_model import HardwareModel, Topology
 from repro.core.multichip import plan_multichip_network
 from repro.core.network_planner import InfeasibleNetworkError, plan_network
+from repro.obs import REGISTRY
+from repro.obs import report as obs_report
+from repro.obs.chrome import write_chrome_trace
 
 # ------------------------------------------------------------------ #
 # Frozen PR-3 planner numbers (full-scope defaults, rng_seed=0): the
@@ -127,16 +137,78 @@ def _kerncheck_clean(networks: list[str]) -> bool:
     return report.ok
 
 
-def _lru_stats() -> dict:
-    s = solver.solve_cached.cache_info()
-    k = solver.best_s2_cached.cache_info()
+def _record_lru_stats() -> None:
+    """Mirror the solver LRU counters into the obs metrics registry."""
+    for name, info in (("solve_cached", solver.solve_cached.cache_info()),
+                       ("best_s2_cached",
+                        solver.best_s2_cached.cache_info())):
+        REGISTRY.set(f"lru/{name}/hits", info.hits)
+        REGISTRY.set(f"lru/{name}/misses", info.misses)
+        REGISTRY.set(f"lru/{name}/hit_rate",
+                     round(info.hits / max(1, info.hits + info.misses), 4))
+
+
+def build_profile() -> dict:
+    """The ``--profile`` payload, read back from the obs metrics registry
+    (stage timers accumulated in :func:`main`, LRU counters mirrored by
+    :func:`_record_lru_stats`, per-call planner detail from the hooks in
+    ``core.network_planner`` / ``core.multichip``).  The
+    ``planner_seconds`` / ``stages`` / ``lru`` keys and shapes are byte-
+    stable against the pre-obs inline implementation — they are the
+    frozen trajectory vocabulary; ``planner`` is the additive detail."""
+    stage_keys = ("networks_s", "mem_sweep_s", "chip_sweep_s")
+    stages = {k: round(REGISTRY.get(f"bench/{k}"), 4) for k in stage_keys}
+    profile = {
+        "planner_seconds": round(
+            sum(REGISTRY.get(f"bench/{k}") for k in stage_keys), 4),
+        "stages": stages,
+        "lru": {
+            name: {"hits": int(REGISTRY.get(f"lru/{name}/hits")),
+                   "misses": int(REGISTRY.get(f"lru/{name}/misses")),
+                   "hit_rate": REGISTRY.get(f"lru/{name}/hit_rate")}
+            for name in ("solve_cached", "best_s2_cached")},
+    }
+    planner = REGISTRY.snapshot("planner")
+    if planner:
+        profile["planner"] = planner
+    return profile
+
+
+#: The observability canary: the network x topology point every in-scope
+#: benchmark run replays through plan -> simulate -> kernel-trace ->
+#: drift reconciliation.  tight4 exercises the S2 fallback and all four
+#: sharding modes on the 2x2 torus while staying seconds-fast.
+OBS_CANARY = ("tight4", "torus2x2")
+
+
+def run_obs_canary(*, iters: int, restarts: int, rng_seed: int,
+                   out_dir: str) -> dict:
+    """Plan the canary point, execute it functionally, statically trace
+    its kernels, export the unified Chrome trace, and reconcile the
+    three timelines (``repro.obs.report``).  ``reconciled`` is folded
+    into the benchmark exit code — nonzero drift between the planner's
+    predictions and what the simulator measured is a cost-model bug."""
+    network, topology = OBS_CANARY
+    with REGISTRY.timer("bench/obs_canary_s"):
+        rep = obs_report.build_report(
+            network, topology=topology, iters=iters,
+            restarts=restarts, rng_seed=rng_seed)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    trace_path = os.path.join(
+        out_dir, f"obs_trace_{network}_{topology}.json")
+    write_chrome_trace(rep.trace, trace_path)
+    if not rep.ok:
+        print(f"[obs] canary FAIL:\n{rep.render()}", file=sys.stderr)
     return {
-        "solve_cached": {"hits": s.hits, "misses": s.misses,
-                         "hit_rate": round(s.hits / max(1, s.hits
-                                                        + s.misses), 4)},
-        "best_s2_cached": {"hits": k.hits, "misses": k.misses,
-                           "hit_rate": round(k.hits / max(1, k.hits
-                                                          + k.misses), 4)},
+        "network": network,
+        "topology": topology,
+        "obs_trace_valid": rep.trace_valid,
+        "max_drift_elements": rep.max_drift_elements,
+        "max_drift_cycles": rep.max_drift_cycles,
+        "trace_events": len(rep.trace["traceEvents"]),
+        "trace_path": trace_path,
+        "reconciled": rep.ok,
     }
 
 
@@ -318,10 +390,13 @@ def write_bench_summary(path: str, rows: list[dict],
                         chip_sweeps: list[dict],
                         sweeps: list[dict] | None = None,
                         profile: dict | None = None,
-                        kerncheck_clean: bool = True) -> None:
+                        kerncheck_clean: bool = True,
+                        obs_canary: dict | None = None) -> None:
     """Stable repo-root summary: the perf-trajectory file other PRs diff.
     ``planner_seconds`` and ``gain_vs_pr3`` are the stable trajectory
-    keys (baseline: the frozen ``PR3_BASELINE`` table)."""
+    keys (baseline: the frozen ``PR3_BASELINE`` table);
+    ``obs_trace_valid`` / ``max_drift_elements`` pin the observability
+    canary's drift reconciliation (``repro.obs``)."""
     summary = {
         "benchmark": "network_plan",
         "verifier_clean": _all_verifier_clean(rows, chip_sweeps, sweeps),
@@ -360,6 +435,14 @@ def write_bench_summary(path: str, rows: list[dict],
                  for p in sw["points"]]}
             for sw in sorted(chip_sweeps, key=lambda s: s["network"])],
     }
+    if obs_canary is not None:
+        summary["obs_trace_valid"] = obs_canary["obs_trace_valid"]
+        summary["max_drift_elements"] = obs_canary["max_drift_elements"]
+        summary["obs_canary"] = {
+            k: obs_canary[k] for k in
+            ("network", "topology", "obs_trace_valid",
+             "max_drift_elements", "max_drift_cycles", "trace_events",
+             "reconciled")}
     if profile is not None:
         summary["profile"] = profile
     with open(path, "w") as f:
@@ -430,56 +513,59 @@ def main(argv=None) -> int:
     hw = HardwareModel(nbop_pe=args.nbop_pe, size_mem=args.size_mem)
     solver.solve_cached.cache_clear()
     solver.best_s2_cached.cache_clear()
-    t_start = time.perf_counter()
-    rows = [bench_network(n, hw, iters=args.iters, restarts=args.restarts,
-                          rng_seed=args.rng_seed) for n in networks]
-    t_networks = time.perf_counter()
+    REGISTRY.clear()
+    with REGISTRY.timer("bench/networks_s"):
+        rows = [bench_network(n, hw, iters=args.iters,
+                              restarts=args.restarts,
+                              rng_seed=args.rng_seed) for n in networks]
 
     sweeps = []
-    if args.sweep_mem:
-        for n in networks:
-            if args.sweep_mem == ["auto"]:
-                budgets = budget_points(NETWORKS[n])
-            else:
-                budgets = sorted(int(b) for b in args.sweep_mem)
-            sweeps.append(sweep_tight_memory(
-                n, budgets, nbop_pe=args.nbop_pe, iters=args.iters,
-                restarts=args.restarts, rng_seed=args.rng_seed))
-    t_mem_sweep = time.perf_counter()
+    with REGISTRY.timer("bench/mem_sweep_s"):
+        if args.sweep_mem:
+            for n in networks:
+                if args.sweep_mem == ["auto"]:
+                    budgets = budget_points(NETWORKS[n])
+                else:
+                    budgets = sorted(int(b) for b in args.sweep_mem)
+                sweeps.append(sweep_tight_memory(
+                    n, budgets, nbop_pe=args.nbop_pe, iters=args.iters,
+                    restarts=args.restarts, rng_seed=args.rng_seed))
 
     chip_sweeps = []
-    if args.sweep_chips:
-        counts = sorted({int(c) for c in args.sweep_chips})
-        for t in topologies:               # a torus matching no swept
-            if t.startswith("torus") and not any(   # count (beyond the
-                    _resolve_topology(t, n)          # shared n=1 ring
-                    for n in counts if n > 1):       # baseline) is a
-                print(f"[network_plan] --topology {t} matches no "  # typo,
-                      f"--sweep-chips count in {counts}",  # not an empty
-                      file=sys.stderr)                     # sweep
-                return 2
-        for n in networks:
-            chip_sweeps.append(sweep_chip_counts(
-                n, counts, topologies, nbop_pe=args.nbop_pe,
-                iters=args.iters, restarts=args.restarts,
-                rng_seed=args.rng_seed))
-    t_end = time.perf_counter()
+    with REGISTRY.timer("bench/chip_sweep_s"):
+        if args.sweep_chips:
+            counts = sorted({int(c) for c in args.sweep_chips})
+            for t in topologies:           # a torus matching no swept
+                if t.startswith("torus") and not any(  # count (beyond
+                        _resolve_topology(t, n)       # the shared n=1
+                        for n in counts if n > 1):    # ring baseline)
+                    print(f"[network_plan] --topology {t} matches no "
+                          f"--sweep-chips count in {counts}",
+                          file=sys.stderr)    # is a typo, not an empty
+                    return 2                  # sweep
+            for n in networks:
+                chip_sweeps.append(sweep_chip_counts(
+                    n, counts, topologies, nbop_pe=args.nbop_pe,
+                    iters=args.iters, restarts=args.restarts,
+                    rng_seed=args.rng_seed))
 
-    total_wall = t_end - t_start
-    profile = None
-    if args.profile:
-        profile = {
-            "planner_seconds": round(total_wall, 4),
-            "stages": {
-                "networks_s": round(t_networks - t_start, 4),
-                "mem_sweep_s": round(t_mem_sweep - t_networks, 4),
-                "chip_sweep_s": round(t_end - t_mem_sweep, 4),
-            },
-            "lru": _lru_stats(),
-        }
+    # total planner wall-clock (the --max-planner-seconds guard) = the
+    # three stage timers; the obs canary below is excluded by design —
+    # it measures the *simulator*, not the planner
+    total_wall = sum(REGISTRY.get(f"bench/{k}") for k in
+                     ("networks_s", "mem_sweep_s", "chip_sweep_s"))
+    _record_lru_stats()
+    profile = build_profile() if args.profile else None
 
     verifier_clean = _all_verifier_clean(rows, chip_sweeps, sweeps)
     kerncheck_clean = _kerncheck_clean(networks)
+    out_dir = os.path.dirname(args.out)
+    obs_canary = None
+    if OBS_CANARY[0] in networks:
+        obs_canary = run_obs_canary(
+            iters=args.iters, restarts=args.restarts,
+            rng_seed=args.rng_seed,
+            out_dir=out_dir or "benchmarks/results")
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
@@ -488,9 +574,12 @@ def main(argv=None) -> int:
               "networks": rows,
               "tight_memory_sweep": sweeps,
               "chip_sweep": chip_sweeps}
+    if obs_canary is not None:
+        result["obs_canary"] = obs_canary
+        result["obs_trace_valid"] = obs_canary["obs_trace_valid"]
+        result["max_drift_elements"] = obs_canary["max_drift_elements"]
     if profile is not None:
         result["profile"] = profile
-    out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
@@ -498,7 +587,8 @@ def main(argv=None) -> int:
     if trajectory_grade:
         write_bench_summary(args.bench_out, rows, chip_sweeps,
                             sweeps=sweeps, profile=profile,
-                            kerncheck_clean=kerncheck_clean)
+                            kerncheck_clean=kerncheck_clean,
+                            obs_canary=obs_canary)
 
     for r in rows:
         if not r["feasible"]:
@@ -536,6 +626,15 @@ def main(argv=None) -> int:
                   f"(serialized {pt['serialized_duration']:g}, "
                   f"ici {pt['ici_fraction']:.1%}"
                   f"{f', {sp}x vs 1 chip' if sp else ''})")
+    if obs_canary is not None:
+        print(f"[obs] canary {obs_canary['network']}@"
+              f"{obs_canary['topology']}: "
+              f"trace {'valid' if obs_canary['obs_trace_valid'] else 'INVALID'} "
+              f"({obs_canary['trace_events']} events), max drift "
+              f"{obs_canary['max_drift_elements']} el / "
+              f"{obs_canary['max_drift_cycles']:g} cy -> "
+              f"{'reconciled' if obs_canary['reconciled'] else 'FAIL'} "
+              f"({obs_canary['trace_path']})")
     if profile is not None:
         lru = profile["lru"]
         print(f"[profile] planner {profile['planner_seconds']}s "
@@ -553,7 +652,13 @@ def main(argv=None) -> int:
     if not kerncheck_clean:
         print("[kerncheck] at least one emitted kernel failed the "
               "contract check — emitter/kernel bug", file=sys.stderr)
+    if obs_canary is not None and not obs_canary["reconciled"]:
+        print("[obs] the observability canary found drift between the "
+              "plan's predictions and the simulator's measurements (or "
+              "an invalid trace) — cost-model/simulator bug",
+              file=sys.stderr)
     ok = verifier_clean and kerncheck_clean
+    ok = ok and (obs_canary is None or obs_canary["reconciled"])
     ok = ok and all(r["feasible"] and r["beats_baseline"] for r in rows)
     # the sweep must stay feasible and beat greedy on >= 1 budget point
     for sw in sweeps:

@@ -1017,6 +1017,10 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
         if i > 0:
             chosen.insert(0, prev_mode)
     planning_seconds = time.perf_counter() - t0
+    # observability hooks (lazy import — see core.network_planner)
+    from repro.obs.metrics import REGISTRY
+    REGISTRY.incr("planner/multichip_calls")
+    REGISTRY.incr("planner/multichip_s", planning_seconds)
 
     def _layer(i: int) -> MultiChipLayerPlan:
         ev = evals[i][chosen[i]]

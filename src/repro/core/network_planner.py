@@ -484,6 +484,7 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
                 f"layer {i} ({spec.c_in}x{spec.h_in}x{spec.w_in}"
                 f"->{spec.c_out}): no strategy fits "
                 f"size_mem={hw.size_mem}") from e
+    t_solved = time.perf_counter()
     # feasibility validation: never emit a plan whose peak exceeds the
     # budget (regression guard for custom solve_fn paths too).
     if hw.size_mem is not None:
@@ -544,7 +545,19 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
         cache_hits = info.hits - hits0
         solver_calls = (info.hits + info.misses) - calls0
 
-    baseline = greedy_network_duration(specs, hw, p=p, max_group=max_group)
+    # observability hooks: per-stage wall-clocks accumulate in the
+    # process-wide metrics registry (lazy import — repro.obs depends on
+    # repro.core, never the reverse at module level)
+    from repro.obs.metrics import REGISTRY
+    REGISTRY.incr("planner/plan_network_calls")
+    REGISTRY.incr("planner/solve_s", t_solved - t0)
+    REGISTRY.incr("planner/refine_s", planning_seconds - (t_solved - t0))
+    REGISTRY.incr("planner/solver_calls", solver_calls)
+    REGISTRY.incr("planner/cache_hits", cache_hits)
+
+    with REGISTRY.timer("planner/baseline_s"):
+        baseline = greedy_network_duration(specs, hw, p=p,
+                                           max_group=max_group)
     plan = NetworkPlan(
         name=name, hw=hw, layers=tuple(layers),
         total_duration=total, gross_duration=gross_total,

@@ -1,0 +1,34 @@
+"""Unified offload timeline: structured trace events, Perfetto export,
+and predicted-vs-simulated drift attribution.
+
+Every producer of durations in this repo — the planner's Def-3 step
+ledgers (``core.network_planner`` / ``core.multichip``), the functional
+simulators (``sim.system`` / ``sim.s2`` / ``sim.multichip``), and the
+statically-traced Pallas kernels (``analysis.kerncheck``) — is adapted
+onto ONE shared event model (:mod:`repro.obs.events`): spans on four
+lanes per chip (``dma_in`` / ``compute`` / ``write_back`` / ``ici``),
+counters (VMEM occupancy, cumulative DRAM traffic), and structured
+attributes keyed to Def-3 steps.  From there:
+
+* :mod:`repro.obs.chrome`  — Chrome-trace / Perfetto JSON export with a
+  pinned schema and validator;
+* :mod:`repro.obs.adapters` — plan / simulator / kernel-trace builders;
+* :mod:`repro.obs.metrics` — the planner metrics registry (absorbs the
+  ad-hoc ``--profile`` perf_counter keys of ``benchmarks.network_plan``);
+* :mod:`repro.obs.report`  — ``python -m repro.obs.report``: walks the
+  predicted, simulated and kernel-traced timelines of one network and
+  attributes any divergence to a specific (layer, chip, lane, step).
+
+Only the dependency-light leaves are imported eagerly here; adapters and
+the report pull in ``sim``/``analysis`` and must be imported explicitly
+(``core`` imports :mod:`repro.obs.metrics` lazily, so the package root
+must never import anything that imports ``core``'s dependents).
+"""
+from repro.obs.events import (CounterSample, LANES, Span, StepLanes,
+                              Timeline, decompose_step)
+from repro.obs.metrics import MetricsRegistry, REGISTRY
+
+__all__ = [
+    "CounterSample", "LANES", "MetricsRegistry", "REGISTRY", "Span",
+    "StepLanes", "Timeline", "decompose_step",
+]

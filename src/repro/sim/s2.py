@@ -14,6 +14,7 @@ from repro.core.cost_model import HardwareModel
 from repro.core.strategies_s2 import S2Strategy
 from repro.sim.functional import reference_conv
 from repro.sim.layer import ConvLayer
+from repro.sim.trace import StepTrace
 
 
 @dataclasses.dataclass
@@ -27,6 +28,9 @@ class S2Report:
     elements_written: int
     kernel_loads: int         # total kernel fetch events (reload pressure)
     total_macs: int = 0
+    traces: list[StepTrace] = dataclasses.field(default_factory=list)
+    #   measured per-step lane breakdown, aligned 1:1 with the
+    #   strategy's to_steps() (schedule iterations + terminal flush)
 
 
 def run_s2(layer: ConvLayer, hw: HardwareModel,
@@ -44,6 +48,10 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
     reads = writes = kernel_loads = total_macs = 0
     duration = 0.0
     peak = 0
+    # formal step view of the same schedule, for the per-step trace
+    # ledger (to_steps() is the Def-16 lowering the planner prices)
+    steps = strategy.to_steps()
+    traces: list[StepTrace] = []
 
     def write_back(cells):
         nonlocal writes
@@ -55,7 +63,7 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
             written[kid, i, j] = True
             writes += 1
 
-    for g, kg in strategy.schedule:
+    for step_idx, (g, kg) in enumerate(strategy.schedule):
         kids = strategy.kernel_groups[kg]
         need_pix = set(spec.pixels_of_mask(spec.group_mask(g)))
         # a1/a2: eager frees
@@ -68,6 +76,7 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
         # a3: write back the previous step's cells
         write_back(pending)
         dur_w = len(pending) * hw.t_w
+        n_cells_written = len(pending)
         pending = {}
         # a4/a5: loads
         n_pix_loads = 0
@@ -103,10 +112,22 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
         if hw.size_mem is not None and used > hw.size_mem:
             raise MemoryError(f"on-chip overflow: {used} > {hw.size_mem}")
         peak = max(peak, used)
-        duration += (n_pix_loads + n_ker_loads * kelem) * hw.t_l \
-            + dur_w + hw.t_acc
+        dur_l = (n_pix_loads + n_ker_loads * kelem) * hw.t_l
+        duration += dur_l + dur_w + hw.t_acc
+        traces.append(StepTrace(
+            index=step_idx, step=steps[step_idx], mem_elements=used,
+            duration=dur_l + dur_w + hw.t_acc,
+            load_duration=dur_l, write_duration=dur_w,
+            compute_duration=hw.t_acc,
+            read_elements=n_pix_loads * spec.c_in + n_ker_loads * kelem,
+            written_elements=n_cells_written))
     write_back(pending)
-    duration += len(pending) * hw.t_w
+    flush_dur = len(pending) * hw.t_w
+    duration += flush_dur
+    traces.append(StepTrace(
+        index=len(strategy.schedule), step=steps[-1], mem_elements=0,
+        duration=flush_dur, write_duration=flush_dur,
+        written_elements=len(pending)))
 
     ref = reference_conv(layer)
     ok = bool(written.all()) and bool(
@@ -115,4 +136,5 @@ def run_s2(layer: ConvLayer, hw: HardwareModel,
     return S2Report(output=out, correct=ok, max_abs_err=err,
                     total_duration=duration, peak_memory=peak,
                     elements_read=reads, elements_written=writes,
-                    kernel_loads=kernel_loads, total_macs=total_macs)
+                    kernel_loads=kernel_loads, total_macs=total_macs,
+                    traces=traces)

@@ -14,8 +14,7 @@ import numpy as np
 
 from repro.core.conv_spec import ConvSpec
 from repro.core.cost_model import HardwareModel
-from repro.core.formalism import (MemoryState, Step, apply_step,
-                                  step_duration)
+from repro.core.formalism import MemoryState, Step, apply_step
 from repro.core.strategies import GroupedStrategy
 from repro.sim.accelerator import Accelerator
 from repro.sim.dram import Dram
@@ -68,19 +67,25 @@ class System:
         total_duration = 0.0
         peak = 0
         for idx, s in enumerate(steps):
+            read0, written0 = dram.elements_read, dram.elements_written
             # 2) free
             acc.mem.free_pixels(spec.pixels_of_mask(s.f_inp))
             acc.mem.free_kernels(spec.pixels_of_mask(s.f_ker))
             # 3) write back
+            n_wb = 0
             for pid, vals in acc.mem.pop_outputs(
                     spec.pixels_of_mask(s.w)).items():
                 dram.write_output(pid, vals)
+                n_wb += 1
             # 4) load
+            n_pix = n_ker = 0
             for j in spec.pixels_of_mask(s.i_slice):
                 h, w = spec.pixel_pos(j)
                 acc.mem.store_pixel(j, dram.read_pixel(h, w))
+                n_pix += 1
             for k in spec.pixels_of_mask(s.k_sub):
                 acc.mem.store_kernel(k, dram.read_kernel(k))
+                n_ker += 1
             peak = max(peak, acc.mem.used)
             acc.mem.check_capacity()
             # 5) compute
@@ -96,10 +101,21 @@ class System:
                 raise StateMismatchError(f"step {idx}: kernel state mismatch")
             if set(spec.pixels_of_mask(formal.out)) != set(acc.mem.outputs):
                 raise StateMismatchError(f"step {idx}: output state mismatch")
-            total_duration += step_duration(s, spec, self.hw)
+            # measured lane breakdown (Def-3 a3 -> a4/a5 -> a6), counted
+            # from what the system actually did — NOT recomputed from the
+            # plan, so the obs drift report compares independent numbers
+            kelem = spec.c_in * spec.h_k * spec.w_k
+            write_dur = n_wb * self.hw.t_w
+            load_dur = (n_pix + n_ker * kelem) * self.hw.t_l
+            acc_dur = self.hw.t_acc if s.computes else 0.0
+            total_duration += write_dur + load_dur + acc_dur
             traces.append(StepTrace(
                 index=idx, step=s, mem_elements=acc.mem.used,
-                duration=step_duration(s, spec, self.hw)))
+                duration=write_dur + load_dur + acc_dur,
+                load_duration=load_dur, write_duration=write_dur,
+                compute_duration=acc_dur,
+                read_elements=dram.elements_read - read0,
+                written_elements=dram.elements_written - written0))
 
         max_err = 0.0
         ok = True

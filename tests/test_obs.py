@@ -1,0 +1,352 @@
+"""repro.obs: the unified offload timeline (ISSUE 8).
+
+Locks the event model to the repo's independent duration authorities:
+lane spans never self-overlap, per-layer span sums equal the static
+verifier's Def-3 duration ledger *exactly*, multichip ICI spans
+reconcile with ``core.multichip.ici_schedule``, the Chrome-trace export
+validates against the pinned schema (and mutations are caught), the
+drift report is zero on reconciled plans, the span-driven renderers
+degrade to ``"?"`` on partial schedules, and the ``--profile`` key
+vocabulary stays byte-stable across the metrics-registry migration.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.analysis import verifier
+from repro.configs.clusters import make_cluster
+from repro.configs.networks import NETWORKS
+from repro.core import strategies_s2 as s2
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.core.multichip import ici_schedule, plan_multichip_network
+from repro.core.network_planner import plan_network
+from repro.core.strategies import row_by_row, zigzag
+from repro.obs import LANES, MetricsRegistry, Timeline
+from repro.obs import adapters
+from repro.obs.chrome import (to_chrome_trace, validate_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.report import build_report, drift_rows
+from repro.sim import ConvLayer
+from repro.sim.s2 import run_s2
+from repro.sim.system import System
+from repro.sim.trace import (render_group_grid, render_spans_group_grid,
+                             strategy_timeline)
+
+BIG = HardwareModel(nbop_pe=10 ** 9, size_mem=None)
+SPEC = ConvSpec(c_in=2, h_in=7, w_in=7, n_kernels=6, h_k=3, w_k=3)
+
+
+# ------------------------------------------------------------------ #
+# Span sums vs the verifier's duration ledger (exact, not approx: the
+# unit cost model prices integer cycles, floats are exact)
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("builder,p", [(row_by_row, 3), (zigzag, 5)])
+def test_s1_span_sum_equals_verifier_ledger(builder, p):
+    strat = builder(SPEC, p)
+    tl = strategy_timeline(strat, BIG, layer=0)
+    walk = verifier.walk_steps(SPEC, BIG, strat.to_steps())
+    assert not walk.aborted
+    assert tl.span_sum(layer=0) == walk.total_duration
+    for idx, dur in enumerate(walk.durations):
+        assert sum(s.dur for s in tl.spans if s.step == idx) == dur
+
+
+@pytest.mark.parametrize("builder,p,kg", [(s2.kernel_major, 3, 2),
+                                          (s2.patch_major, 4, 3)])
+def test_s2_span_sum_equals_verifier_ledger(builder, p, kg):
+    strat = builder(SPEC, p, kg)
+    tl = strategy_timeline(strat, BIG, layer=0)
+    walk = verifier.walk_steps(SPEC, BIG, strat.to_steps(),
+                               kernel_groups=strat.kernel_groups)
+    assert not walk.aborted
+    assert tl.span_sum(layer=0) == walk.total_duration
+    for idx, dur in enumerate(walk.durations):
+        assert sum(s.dur for s in tl.spans if s.step == idx) == dur
+
+
+def test_simulated_spans_match_predicted_spans_exactly():
+    """The simulator's measured lane durations and DRAM element counts
+    per step equal the plan's decomposition — S1 and S2."""
+    layer = ConvLayer.random(SPEC, seed=3)
+    for strat in (zigzag(SPEC, 4), s2.kernel_major(SPEC, 3, 2)):
+        pred = strategy_timeline(strat, BIG, layer=0)
+        if isinstance(strat, s2.S2Strategy):
+            traces = run_s2(layer, BIG, strat).traces
+        else:
+            traces = System(layer, BIG).run(strat).traces
+        sim_tl = Timeline("sim")
+        adapters.add_sim_layer(sim_tl, traces, BIG, chip=0, layer=0,
+                               t0=0.0)
+        for lane in ("dma_in", "compute", "write_back"):
+            assert pred.span_sum(layer=0, lane=lane) == \
+                sim_tl.span_sum(layer=0, lane=lane)
+            assert pred.element_sum(layer=0, lane=lane) == \
+                sim_tl.element_sum(layer=0, lane=lane)
+
+
+# ------------------------------------------------------------------ #
+# Lane serialization
+# ------------------------------------------------------------------ #
+
+def test_lanes_never_self_overlap_network():
+    plan = plan_network(NETWORKS["tight2"], BIG, name="tight2",
+                        polish_iters=60, polish_restarts=1)
+    tl = adapters.network_predicted_timeline(plan)
+    assert tl.overlap_violations() == []
+    assert tl.end_time == plan.gross_duration
+
+
+def test_lanes_never_self_overlap_multichip():
+    specs = NETWORKS["tight2"]
+    size_mem = max(s.kernel_elements for s in specs) // 2
+    cluster = make_cluster(2, size_mem=size_mem, topology="ring")
+    plan = plan_multichip_network(specs, cluster, name="tight2",
+                                  polish_iters=60, polish_restarts=1,
+                                  include_single_chip_baseline=False)
+    tl = adapters.multichip_predicted_timeline(plan)
+    assert tl.overlap_violations() == []
+
+
+def test_overlapping_spans_are_flagged():
+    tl = Timeline("t")
+    tl.add_span("a", "compute", 0, 0.0, 2.0)
+    tl.add_span("b", "compute", 0, 1.0, 2.0)     # overlaps a
+    tl.add_span("c", "compute", 1, 1.0, 2.0)     # other chip: fine
+    assert len(tl.overlap_violations()) == 1
+
+
+# ------------------------------------------------------------------ #
+# Multichip ICI spans vs the pricing function
+# ------------------------------------------------------------------ #
+
+def test_multichip_ici_spans_reconcile_with_ici_schedule():
+    specs = NETWORKS["tight2"]
+    size_mem = max(s.kernel_elements for s in specs) // 2
+    cluster = make_cluster(4, size_mem=size_mem, topology="torus2x2")
+    plan = plan_multichip_network(specs, cluster, name="tight2",
+                                  polish_iters=60, polish_restarts=1,
+                                  include_single_chip_baseline=False)
+    per_layer, final = ici_schedule(
+        [lp.spec for lp in plan.layers],
+        [lp.mode for lp in plan.layers],
+        [lp.active_chips for lp in plan.layers], cluster)
+    tl = adapters.multichip_predicted_timeline(plan)
+    for lp, elems in zip(plan.layers, per_layer):
+        assert lp.ici_elements == elems
+        spans = tl.select(layer=lp.index, lane="ici")
+        if elems == 0:
+            assert spans == []
+            continue
+        assert len(spans) == len(lp.shards)      # one span per chip
+        for s in spans:
+            assert s.elements == elems
+            assert s.dur == lp.ici_duration
+    gather = [s for s in tl.select(lane="ici") if s.layer is None]
+    assert sum(s.elements for s in gather) == \
+        final * (len(plan.layers[-1].shards) if final else 0)
+
+
+# ------------------------------------------------------------------ #
+# Chrome trace export
+# ------------------------------------------------------------------ #
+
+def test_chrome_trace_validates_and_mutations_are_caught(tmp_path):
+    tl = strategy_timeline(zigzag(SPEC, 4), BIG, layer=0)
+    trace = to_chrome_trace([tl])
+    assert validate_chrome_trace(trace) == []
+    path = os.path.join(tmp_path, "trace.json")
+    write_chrome_trace(trace, path)
+    with open(path) as f:
+        assert validate_chrome_trace(json.load(f)) == []
+
+    bad_phase = json.loads(json.dumps(trace))
+    bad_phase["traceEvents"][0]["ph"] = "Q"
+    assert validate_chrome_trace(bad_phase)
+
+    missing_key = json.loads(json.dumps(trace))
+    del missing_key["traceEvents"][-1]["pid"]
+    assert validate_chrome_trace(missing_key)
+
+    bad_lane = json.loads(json.dumps(trace))
+    for ev in bad_lane["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["cat"] = "warp_drive"
+            break
+    assert validate_chrome_trace(bad_lane)
+
+    negative_ts = json.loads(json.dumps(trace))
+    for ev in negative_ts["traceEvents"]:
+        if ev["ph"] == "X":
+            ev["ts"] = -1.0
+            break
+    assert validate_chrome_trace(negative_ts)
+
+
+def test_chrome_trace_covers_all_lanes_per_chip():
+    """Every (timeline, chip) process in the export carries its spans as
+    thread rows indexed by the LANES order."""
+    specs = NETWORKS["tight2"]
+    size_mem = max(s.kernel_elements for s in specs) // 2
+    cluster = make_cluster(2, size_mem=size_mem, topology="ring")
+    plan = plan_multichip_network(specs, cluster, name="tight2",
+                                  polish_iters=60, polish_restarts=1,
+                                  include_single_chip_baseline=False)
+    tl = adapters.multichip_predicted_timeline(plan)
+    trace = to_chrome_trace([tl])
+    assert validate_chrome_trace(trace) == []
+    name_of = {e["pid"]: e["args"]["name"] for e in trace["traceEvents"]
+               if e["ph"] == "M" and e["name"] == "process_name"}
+    xs = [e for e in trace["traceEvents"] if e["ph"] == "X"]
+    for chip in tl.chips():
+        pids = {pid for pid, n in name_of.items()
+                if n.endswith(f"chip{chip}")}
+        lanes = {e["cat"] for e in xs if e["pid"] in pids}
+        assert {"dma_in", "compute", "write_back"} <= lanes
+
+
+# ------------------------------------------------------------------ #
+# Drift report
+# ------------------------------------------------------------------ #
+
+def test_drift_report_zero_on_reconciled_single_chip():
+    rep = build_report("tight2", iters=60, restarts=1)
+    assert rep.sim_correct and rep.accounting_exact
+    assert rep.trace_valid, rep.trace_errors
+    assert rep.max_drift_elements == 0
+    assert rep.max_drift_cycles == 0.0
+    assert rep.ok
+    assert all(r.first_divergent_step is None for r in rep.rows)
+
+
+def test_drift_report_zero_on_reconciled_multichip():
+    rep = build_report("tight2", topology="ring", n_chips=2,
+                       iters=60, restarts=1, include_kernel=False)
+    assert rep.ok
+    assert rep.max_drift_elements == 0
+
+
+def test_drift_rows_attribute_divergence_to_first_step():
+    """A tampered simulated timeline is pinned to the step, lane and
+    chip where it first deviates."""
+    strat = zigzag(SPEC, 4)
+    pred = strategy_timeline(strat, BIG, layer=0)
+    tampered = Timeline("tampered")
+    victim = None
+    for s in pred.spans:
+        if victim is None and s.lane == "dma_in" and s.step == 2:
+            victim = s
+            tampered.add_span(s.name, s.lane, s.chip, s.t0, s.dur + 1.0,
+                              layer=s.layer, step=s.step,
+                              elements=s.elements + 7)
+        else:
+            tampered.extend([s])
+    assert victim is not None
+    rows = drift_rows(pred, tampered)
+    bad = [r for r in rows if not r.clean]
+    assert bad and all(r.lane == "dma_in" for r in bad)
+    assert {r.first_divergent_step for r in rows} == {2}
+    assert max(r.drift_elements for r in bad) == 7
+
+
+# ------------------------------------------------------------------ #
+# Renderers on the event model
+# ------------------------------------------------------------------ #
+
+def test_render_group_grid_matches_strategy_and_has_no_placeholders():
+    out = render_group_grid(zigzag(SPEC, 4))
+    assert "?" not in out
+    body = out.splitlines()[1:]
+    assert len(body) == SPEC.h_out
+    assert all(len(r.split()) == SPEC.w_out for r in body)
+
+
+def test_render_partial_schedule_pads_placeholder_to_cell_width():
+    """Unassigned output positions render '?' at the same cell width as
+    assigned ones, so partial schedules (e.g. one shard's band) align."""
+    strat = zigzag(ConvSpec(c_in=1, h_in=14, w_in=14, n_kernels=1,
+                            h_k=3, w_k=3), 7)
+    tl = strategy_timeline(strat)
+    assert strat.n_steps > 10          # 2-digit step labels force cell=2
+    compute = [s for s in tl.spans if s.lane == "compute"]
+    kept = [s for s in tl.spans
+            if s.lane != "compute" or (s.step or 0) < len(compute) // 2]
+    out = render_spans_group_grid(kept, strat.spec, title="partial")
+    lines = out.splitlines()[1:]
+    assert any("?" in ln for ln in lines)
+    # every cell (assigned label or '?') is right-justified to the same
+    # 2-char width, so all rows are the same length and columns align
+    w_out = strat.spec.w_out
+    assert all(len(ln) == 3 * w_out - 1 for ln in lines)
+    for ln in lines:
+        cells = [ln[3 * i:3 * i + 2] for i in range(w_out)]
+        assert all(c == " ?" or c.strip().isdigit() for c in cells)
+    assert any(" ?" in ln for ln in lines)
+
+
+# ------------------------------------------------------------------ #
+# Metrics registry + profile key stability
+# ------------------------------------------------------------------ #
+
+def test_metrics_registry_accumulates_and_nests():
+    reg = MetricsRegistry()
+    reg.incr("a/b", 2)
+    reg.incr("a/b", 3)
+    reg.set("a/c/d", 1.23456)
+    with reg.timer("t/x"):
+        pass
+    with reg.timer("t/x"):
+        pass
+    snap = reg.snapshot()
+    assert snap["a"]["b"] == 5
+    assert snap["a"]["c"]["d"] == 1.2346       # rounded
+    assert reg.get("t/x") >= 0                 # accumulated twice
+    assert reg.keys() == ["a/b", "a/c/d", "t/x"]
+    reg.clear()
+    assert reg.keys() == []
+
+
+def test_profile_keys_byte_stable_vs_pr3_vocabulary():
+    """The --profile payload built from the registry keeps the frozen
+    key vocabulary the perf trajectory diffs (``planner_seconds`` /
+    ``stages`` / ``lru``); per-call planner detail is additive only."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(repo, "benchmarks"))
+    import network_plan as bench
+    bench.REGISTRY.clear()
+    for k in ("networks_s", "mem_sweep_s", "chip_sweep_s"):
+        with bench.REGISTRY.timer(f"bench/{k}"):
+            pass
+    bench._record_lru_stats()
+    profile = bench.build_profile()
+    assert set(profile) <= {"planner_seconds", "stages", "lru", "planner"}
+    assert set(profile["stages"]) == \
+        {"networks_s", "mem_sweep_s", "chip_sweep_s"}
+    assert set(profile["lru"]) == {"solve_cached", "best_s2_cached"}
+    for lru in profile["lru"].values():
+        assert set(lru) == {"hits", "misses", "hit_rate"}
+        assert isinstance(lru["hits"], int)
+    # the planner hooks fire on every plan_network call
+    bench.REGISTRY.clear()
+    plan_network([SPEC], BIG, name="one", polish_iters=40,
+                 polish_restarts=1)
+    assert bench.REGISTRY.get("planner/plan_network_calls") == 1
+    assert bench.REGISTRY.get("planner/solve_s") > 0
+    detail = bench.REGISTRY.snapshot("planner")
+    assert {"plan_network_calls", "solve_s", "refine_s",
+            "baseline_s"} <= set(detail)
+
+
+def test_counters_exported_and_monotone_traffic():
+    plan = plan_network(NETWORKS["tight2"], BIG, name="tight2",
+                        polish_iters=60, polish_restarts=1)
+    tl = adapters.network_predicted_timeline(plan)
+    reads = [c.value for c in tl.counters
+             if c.name == "dram_read_elements"]
+    assert reads == sorted(reads) and reads[-1] > 0
+    trace = to_chrome_trace([tl])
+    assert any(e["ph"] == "C" for e in trace["traceEvents"])
+    assert len(LANES) == 4
