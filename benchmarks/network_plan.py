@@ -32,6 +32,11 @@ observability loop — plan, functional simulation, kernel trace, Chrome-
 trace export, drift reconciliation (``repro.obs.report``) — pinning
 ``obs_trace_valid`` / ``max_drift_elements`` into the summary and the
 exit code: predictability is a postcondition, not a hope.
+``--faults`` extends that postcondition to the failure cases: the
+canary point is replayed under the ``repro.resil`` chip-death and
+link-degradation scenarios (each run twice for bit-for-bit determinism,
+verification forced on), pinning ``recovery_exact`` /
+``degraded_slowdown`` into the summary and the exit code.
 
 Full-scope runs (no ``--fast``, no ``--networks`` filter) also refresh
 ``BENCH_network_plan.json`` at the repo root — a stable, compact summary
@@ -44,7 +49,7 @@ it untouched so degraded numbers never clobber the trajectory.
         [--sweep-mem auto | --sweep-mem 2000 8000 ...] \
         [--sweep-chips auto | --sweep-chips 1 2 4 ...] \
         [--topology ring biring torus2x2 ...] \
-        [--restarts 4] [--iters 6000] [--fast] [--profile] \
+        [--restarts 4] [--iters 6000] [--fast] [--profile] [--faults] \
         [--max-planner-seconds S] \
         [--out benchmarks/results/network_plan.json] \
         [--bench-out BENCH_network_plan.json]
@@ -209,6 +214,57 @@ def run_obs_canary(*, iters: int, restarts: int, rng_seed: int,
         "trace_events": len(rep.trace["traceEvents"]),
         "trace_path": trace_path,
         "reconciled": rep.ok,
+    }
+
+
+#: The resilience canary scenarios every ``--faults`` run replays on the
+#: canary point: a chip death (wasted stage + detection + degraded
+#: re-plan + restage + retry) and an ICI link degradation (boundary
+#: re-plan, no recompute).  Each runs twice (bit-for-bit determinism
+#: check) with plan verification forced on.
+FAULT_SCENARIOS = ("chip-death", "link-degrade")
+
+
+def run_fault_canary(*, iters: int, restarts: int, rng_seed: int,
+                     seed: int = 0) -> dict:
+    """Fault-injection postcondition (``repro.resil``): the canary
+    network must recover from both scenarios with exactly-once outputs
+    equal to the fault-free reference, verified degraded re-plans, and a
+    reproducible fingerprint.  ``recovery_exact`` / ``degraded_slowdown``
+    are pinned into the summary and the exit code."""
+    from repro.resil import faultsim
+    network, topology = OBS_CANARY
+    specs = NETWORKS[network]
+    rows = []
+    with REGISTRY.timer("bench/faultsim_s"):
+        for scenario in FAULT_SCENARIOS:
+            schedule = faultsim.build_schedule(
+                scenario, seed, n_layers=len(specs), n_chips=4)
+            rep, findings = faultsim.run_checked(
+                network, schedule, topology=topology, seed=seed,
+                iters=iters, restarts=restarts, rng_seed=rng_seed)
+            if findings:
+                print(f"[faults] {scenario} FAIL: {findings}",
+                      file=sys.stderr)
+            rows.append({
+                "scenario": scenario,
+                "schedule": schedule.describe(),
+                "recovery_exact": rep.recovery_exact,
+                "exactly_once": rep.write_counts_ok,
+                "no_free_lunch": rep.no_free_lunch,
+                "degraded_slowdown": round(rep.degraded_slowdown, 4),
+                "replans": len(rep.recoveries),
+                "wasted_cycles": rep.wasted_cycles,
+                "recovery_cycles": rep.recovery_cycles,
+                "findings": findings,
+                "ok": rep.ok and not findings,
+            })
+    return {
+        "network": network, "topology": topology, "seed": seed,
+        "scenarios": rows,
+        "recovery_exact": all(r["recovery_exact"] for r in rows),
+        "degraded_slowdown": max(r["degraded_slowdown"] for r in rows),
+        "ok": all(r["ok"] for r in rows),
     }
 
 
@@ -391,7 +447,8 @@ def write_bench_summary(path: str, rows: list[dict],
                         sweeps: list[dict] | None = None,
                         profile: dict | None = None,
                         kerncheck_clean: bool = True,
-                        obs_canary: dict | None = None) -> None:
+                        obs_canary: dict | None = None,
+                        fault_canary: dict | None = None) -> None:
     """Stable repo-root summary: the perf-trajectory file other PRs diff.
     ``planner_seconds`` and ``gain_vs_pr3`` are the stable trajectory
     keys (baseline: the frozen ``PR3_BASELINE`` table);
@@ -443,6 +500,19 @@ def write_bench_summary(path: str, rows: list[dict],
             ("network", "topology", "obs_trace_valid",
              "max_drift_elements", "max_drift_cycles", "trace_events",
              "reconciled")}
+    if fault_canary is not None:
+        summary["recovery_exact"] = fault_canary["recovery_exact"]
+        summary["degraded_slowdown"] = fault_canary["degraded_slowdown"]
+        summary["fault_canary"] = {
+            "network": fault_canary["network"],
+            "topology": fault_canary["topology"],
+            "seed": fault_canary["seed"],
+            "scenarios": [
+                {k: r[k] for k in
+                 ("scenario", "recovery_exact", "exactly_once",
+                  "no_free_lunch", "degraded_slowdown", "replans", "ok")}
+                for r in fault_canary["scenarios"]],
+        }
     if profile is not None:
         summary["profile"] = profile
     with open(path, "w") as f:
@@ -480,6 +550,12 @@ def main(argv=None) -> int:
                     help="emit per-stage planner wall-clock and solver-LRU "
                          "hit rates (stable keys planner_seconds / "
                          "gain_vs_pr3) for the perf trajectory")
+    ap.add_argument("--faults", action="store_true",
+                    help="replay the fault-injection canary (chip-death "
+                         "+ link-degrade on the canary point, "
+                         "repro.resil) and pin recovery_exact / "
+                         "degraded_slowdown into the summary and exit "
+                         "code")
     ap.add_argument("--max-planner-seconds", type=float, default=None,
                     help="fail (exit 1) when the total planner wall-clock "
                          "exceeds this bound — the CI guardrail against "
@@ -566,6 +642,11 @@ def main(argv=None) -> int:
             iters=args.iters, restarts=args.restarts,
             rng_seed=args.rng_seed,
             out_dir=out_dir or "benchmarks/results")
+    fault_canary = None
+    if args.faults:
+        fault_canary = run_fault_canary(
+            iters=args.iters, restarts=args.restarts,
+            rng_seed=args.rng_seed)
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
@@ -578,6 +659,10 @@ def main(argv=None) -> int:
         result["obs_canary"] = obs_canary
         result["obs_trace_valid"] = obs_canary["obs_trace_valid"]
         result["max_drift_elements"] = obs_canary["max_drift_elements"]
+    if fault_canary is not None:
+        result["fault_canary"] = fault_canary
+        result["recovery_exact"] = fault_canary["recovery_exact"]
+        result["degraded_slowdown"] = fault_canary["degraded_slowdown"]
     if profile is not None:
         result["profile"] = profile
     if out_dir:
@@ -588,7 +673,8 @@ def main(argv=None) -> int:
         write_bench_summary(args.bench_out, rows, chip_sweeps,
                             sweeps=sweeps, profile=profile,
                             kerncheck_clean=kerncheck_clean,
-                            obs_canary=obs_canary)
+                            obs_canary=obs_canary,
+                            fault_canary=fault_canary)
 
     for r in rows:
         if not r["feasible"]:
@@ -635,6 +721,15 @@ def main(argv=None) -> int:
               f"{obs_canary['max_drift_cycles']:g} cy -> "
               f"{'reconciled' if obs_canary['reconciled'] else 'FAIL'} "
               f"({obs_canary['trace_path']})")
+    if fault_canary is not None:
+        for r in fault_canary["scenarios"]:
+            print(f"[faults] {fault_canary['network']}@"
+                  f"{fault_canary['topology']} {r['scenario']}: "
+                  f"recovery_exact={r['recovery_exact']} "
+                  f"exactly_once={r['exactly_once']} "
+                  f"slowdown={r['degraded_slowdown']}x "
+                  f"({r['replans']} re-plans) -> "
+                  f"{'ok' if r['ok'] else 'FAIL'}")
     if profile is not None:
         lru = profile["lru"]
         print(f"[profile] planner {profile['planner_seconds']}s "
@@ -657,8 +752,14 @@ def main(argv=None) -> int:
               "plan's predictions and the simulator's measurements (or "
               "an invalid trace) — cost-model/simulator bug",
               file=sys.stderr)
+    if fault_canary is not None and not fault_canary["ok"]:
+        print("[faults] the fault-injection canary broke a recovery "
+              "invariant (exactly-once, exact stitching, accounting, "
+              "determinism, or verification) — resil/engine bug",
+              file=sys.stderr)
     ok = verifier_clean and kerncheck_clean
     ok = ok and (obs_canary is None or obs_canary["reconciled"])
+    ok = ok and (fault_canary is None or fault_canary["ok"])
     ok = ok and all(r["feasible"] and r["beats_baseline"] for r in rows)
     # the sweep must stay feasible and beat greedy on >= 1 budget point
     for sw in sweeps:

@@ -237,7 +237,8 @@ def _check_lru_mutable(tree: ast.Module, rel: str,
 def _check_bare_assert(tree: ast.Module, rel: str, lines: list[str],
                        out: list[Finding]) -> None:
     parts = pathlib.PurePath(rel).parts
-    if not ("core" in parts or "sim" in parts or "kernels" in parts):
+    if not ("core" in parts or "sim" in parts or "kernels" in parts
+            or "runtime" in parts or "resil" in parts):
         return
     for node in ast.walk(tree):
         if isinstance(node, ast.Assert) and not _has_pragma(

@@ -45,6 +45,15 @@ planners are (held activations double-count their first loads, Def-3
 footprints are post-step states), so every legal plan passes with zero
 error-severity diagnostics — asserted across the preset networks x
 clusters x topologies in ``tests/test_verifier*.py``.
+
+Degraded re-plans are not special: when ``repro.resil`` re-plans a
+network's tail mid-run (chip death, link degradation, VMEM shrink), the
+suffix plan flows through this same verifier unchanged — against the
+*degraded* cluster's budget, link price and topology — via the
+``verify`` knob ``core.multichip.replan_suffix`` forwards, and
+``faultsim`` forces it on.  A recovery plan that only holds on the
+healthy machine is exactly the kind of claim this module exists to
+reject.
 """
 from __future__ import annotations
 

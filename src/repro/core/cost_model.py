@@ -270,6 +270,39 @@ class ClusterModel:
     def topo(self) -> Topology:
         return self.topology  # normalised to a Topology in __post_init__
 
+    def degraded(self, *, n_chips: "int | None" = None,
+                 topology: "Topology | str | None" = None,
+                 t_ici_factor: float = 1.0,
+                 size_mem_factor: float = 1.0) -> "ClusterModel":
+        """A degraded copy of this cluster (``repro.resil``): fewer chips
+        on a new wiring, ``t_ici_factor``x slower links, and/or a
+        per-chip budget shrunk to ``floor(size_mem * size_mem_factor)``.
+        Revalidates through ``__post_init__`` — the topology must tile
+        the surviving chip count."""
+        if t_ici_factor < 1.0:
+            raise ValueError(
+                f"t_ici_factor must be >= 1 (links only degrade), "
+                f"got {t_ici_factor}")
+        if not 0.0 < size_mem_factor <= 1.0:
+            raise ValueError(
+                f"size_mem_factor must be in (0, 1], got {size_mem_factor}")
+        chip = self.chip
+        if size_mem_factor != 1.0:
+            if chip.size_mem is None:
+                raise ValueError(
+                    "cannot shrink an unconstrained size_mem budget")
+            new_mem = int(chip.size_mem * size_mem_factor)
+            if new_mem < 1:
+                raise ValueError(
+                    f"size_mem_factor {size_mem_factor} leaves no memory "
+                    f"(size_mem={chip.size_mem})")
+            chip = dataclasses.replace(chip, size_mem=new_mem)
+        return ClusterModel(
+            chip=chip,
+            n_chips=self.n_chips if n_chips is None else n_chips,
+            t_ici=self.t_ici * t_ici_factor,
+            topology=self.topology if topology is None else topology)
+
 
 # ---------------------------------------------------------------------------
 # TPU v5e preset — used by core.planner to drive Pallas BlockSpec choices.

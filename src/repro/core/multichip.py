@@ -1076,3 +1076,29 @@ def plan_multichip_network(specs: Sequence[ConvSpec], cluster: ClusterModel,
     if do_verify:
         assert_verified(plan)
     return plan
+
+
+def replan_suffix(specs: Sequence[ConvSpec], cluster: ClusterModel, *,
+                  start: int, name: str = "network",
+                  **kwargs) -> MultiChipPlan:
+    """Re-plan the tail ``specs[start:]`` of a network — the
+    degraded-mode re-planning entry point (``repro.resil``): after a
+    chip death, link degradation or budget shrink, the remaining layers
+    are planned afresh on the surviving/repriced ``cluster``.  The call
+    is warm-started automatically: per-layer solves go through the
+    ``solver.solve_cached`` LRU shared with every other planner, so
+    layers whose shard geometry survives the degradation hit the cache.
+
+    Layer indices in the returned plan are local to the suffix (global
+    layer = ``start`` + local); the engine keeps the mapping.  The first
+    suffix layer is priced from the planner's usual ``_INPUT_LAYOUT``
+    ("all" — every chip holds its input), which recovery pays for
+    explicitly by restaging the last committed activation from the
+    durable store (see ``repro.resil.engine``).
+    """
+    if not 0 <= start < len(specs):
+        raise ValueError(
+            f"suffix start {start} out of range for {len(specs)} layers")
+    return plan_multichip_network(
+        list(specs[start:]), cluster,
+        name=f"{name}[{start}:]", **kwargs)

@@ -21,9 +21,19 @@ from repro.models import registry
 from repro.models.common import Axes
 
 
+class ServeConfigError(ValueError):
+    """A serving config that cannot run (non-positive batch/lengths) —
+    caught at the entry point instead of surfacing as a shape error deep
+    inside jit tracing (or, for ``gen_len=0``, an empty ``np.stack``)."""
+
+
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 32, gen_len: int = 16,
           multi_pod: bool = False, greedy: bool = True):
+    if batch < 1 or prompt_len < 1 or gen_len < 1:
+        raise ServeConfigError(
+            f"batch, prompt_len and gen_len must all be >= 1, got "
+            f"batch={batch} prompt_len={prompt_len} gen_len={gen_len}")
     with contextlib.ExitStack() as mesh_ctx:
         if smoke:
             api = registry.get_reduced(arch)

@@ -106,6 +106,16 @@ def add_sim_layer(tl: Timeline, traces: "list[StepTrace]",
                     tr.compute_duration, layer=layer, step=tr.index,
                     group=tr.step.group)
         t += tr.compute_duration
+        retry_dur = getattr(tr, "retry_duration", 0.0)
+        if retry_dur:
+            # injected DMA transients (repro.resil): the re-issued loads
+            # + backoff surface on the fault lane, keeping the invariant
+            # wb + dma + acc + retry == tr.duration
+            tl.add_span(f"L{layer} s{tr.index} dma-retry", "fault", chip,
+                        t, retry_dur, layer=layer, step=tr.index,
+                        elements=getattr(tr, "retry_elements", 0),
+                        retries=getattr(tr, "retries", 0))
+            t += retry_dur
         tl.add_counter("vmem_elements", chip, t, tr.mem_elements)
         cum_read += tr.read_elements
         tl.add_counter("dram_read_elements", chip, t, cum_read)
@@ -194,6 +204,70 @@ def multichip_simulated_timeline(sim: MultiChipSimReport,
                           chip=shard.chip, layer=lp.index, t0=start)
         t += lp.duration
     _add_final_gather(tl, plan, t)
+    return tl
+
+
+# --------------------------------------------------------------------- #
+# Fault-injected timelines (repro.resil)
+# --------------------------------------------------------------------- #
+
+def faulted_timeline(report, label: str = "faulted") -> Timeline:
+    """Timeline of a fault-injected run (``repro.resil.engine``).
+
+    Committed attempts place their measured shard traces under the
+    stage discipline exactly like :func:`multichip_simulated_timeline`
+    (chips are the attempt's *physical* ids, so a post-recovery plan's
+    slot 0 lands on the surviving chip's track); wasted attempts become
+    ``fault`` spans on every chip of the doomed attempt plus the
+    heartbeat-detection window on the dead chip; every re-plan becomes
+    ``recovery`` spans (re-plan latency, then the recovery-point restage
+    for chip deaths).  Duck-typed over ``FaultSimReport`` so
+    ``repro.obs`` stays below ``repro.resil`` in the layering.
+    """
+    plan0 = report.plans[0]
+    hw = plan0.cluster.chip
+    tl = Timeline(label)
+    for att in report.attempts:
+        if att.wasted:
+            for c in att.phys_chips:
+                tl.add_span(f"L{att.layer} wasted attempt", "fault", c,
+                            att.t0, att.duration, layer=att.layer,
+                            cause="chip_death", dead_chip=att.dead_chip)
+            tl.add_span(f"L{att.layer} detection", "fault",
+                        att.dead_chip, att.t0 + att.duration,
+                        att.detection, layer=att.layer,
+                        cause="heartbeat_timeout")
+            continue
+        lp = att.lp
+        if lp.ici_duration > 0:
+            for shard in lp.shards:
+                tl.add_span(f"L{att.layer} ici {lp.mode}", "ici",
+                            att.phys_chips[shard.chip], att.t0,
+                            lp.ici_duration, layer=att.layer,
+                            elements=lp.ici_elements, mode=lp.mode,
+                            overlap=lp.overlap)
+        start = att.t0 if lp.overlap else att.t0 + lp.ici_duration
+        for shard, rep in zip(lp.shards, att.reports):
+            add_sim_layer(tl, rep.traces, hw,
+                          chip=att.phys_chips[shard.chip],
+                          layer=att.layer, t0=start)
+    for rec in report.recoveries:
+        tl.add_span(f"L{rec.layer} replan {rec.kind}", "recovery", 0,
+                    rec.t0, rec.replan_cycles, layer=rec.layer,
+                    kind=rec.kind, n_chips=rec.n_chips,
+                    topology=rec.new_topology, verified=rec.verified)
+        if rec.restage_cycles > 0:
+            tl.add_span(f"L{rec.layer} restage", "recovery", 0,
+                        rec.t0 + rec.replan_cycles, rec.restage_cycles,
+                        layer=rec.layer, kind=rec.kind,
+                        elements=rec.restage_elements)
+    last = report.plans[-1]
+    if last.final_gather_duration > 0 and report.attempts:
+        t0 = report.faulted_duration - last.final_gather_duration
+        for c in report.attempts[-1].phys_chips:
+            tl.add_span("final gather", "ici", c, t0,
+                        last.final_gather_duration,
+                        elements=last.final_gather_elements)
     return tl
 
 

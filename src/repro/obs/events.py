@@ -33,8 +33,13 @@ from repro.core.formalism import Step
 
 #: Lane vocabulary, in intra-step execution order (``ici`` is the
 #: inter-chip interconnect lane of multichip stages; single-chip
-#: timelines simply never populate it).
-LANES = ("dma_in", "compute", "write_back", "ici")
+#: timelines simply never populate it).  ``fault`` and ``recovery`` are
+#: the resilience lanes (``repro.resil``): ``fault`` spans cover wasted
+#: work — a dead chip's in-flight stage, heartbeat detection latency,
+#: DMA retry backoff — and ``recovery`` spans cover the repair — tail
+#: re-planning and recovery-point restaging.  Fault-free timelines
+#: simply never populate either.
+LANES = ("dma_in", "compute", "write_back", "ici", "fault", "recovery")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -124,6 +124,33 @@ def drift_rows(pred: Timeline, obs: Timeline,
     return rows
 
 
+def fault_attribution_rows(pred: Timeline, faulted: Timeline
+                           ) -> list[DriftRow]:
+    """Degraded-run drift attribution (``repro.resil``): reconcile the
+    fault-free *predicted* timeline against a faulted run per (layer,
+    chip, lane).  The ``fault``/``recovery`` lanes are zero on the
+    predicted side by construction, so their observed totals *are* the
+    overhead the fault model added — wasted attempts, heartbeat
+    detection, DMA retries, re-planning, restaging — while drift on the
+    other lanes shows where the degraded plan executes differently
+    (e.g. a survivor absorbing a dead chip's rows).  Per-step divergence
+    is not judged: a faulted run legitimately diverges at the first
+    fault, and the point of this table is to say by how much and why.
+    """
+    return drift_rows(pred, faulted, per_step=False)
+
+
+def fault_overhead_by_lane(rows: "Sequence[DriftRow]"
+                           ) -> dict[str, float]:
+    """Sum each lane's |observed - predicted| duration drift — the
+    attribution table's bottom line, pinned by ``faultsim``."""
+    out: dict[str, float] = {}
+    for r in rows:
+        out[r.lane] = out.get(r.lane, 0.0) + (
+            r.observed_dur - r.predicted_dur)
+    return out
+
+
 def kernel_drift_rows(plan_tl: Timeline, kern_tl: Timeline
                       ) -> list[DriftRow]:
     """Kernel-vs-plan reconciliation: per-step on ``dma_in``, per-layer

@@ -1,0 +1,34 @@
+"""Fault injection and layer-granular recovery (``repro.resil``).
+
+The planner/simulator stack of PRs 1-8 assumes a perfect machine.  This
+package extends the Def-3 predictability discipline to the failure
+cases a real fleet hits: a seeded deterministic :class:`FaultSchedule`
+(chip death, ICI link degradation, VMEM budget shrink, transient DMA
+failures) is injected into the functional cluster simulation, the
+surviving topology is re-planned mid-network (warm-started from the
+shared ``solve_cached`` LRU, verified by ``repro.analysis.verifier``),
+and recovery is layer-granular: committed write-backs are the recovery
+points, only in-flight work is recomputed, and the stitched outputs are
+proved exactly-once and equal to the fault-free reference convolution.
+
+Entry points: :func:`repro.resil.engine.run_faulted` and the CLI
+``python -m repro.resil.faultsim``.
+"""
+from repro.resil.faults import (ChipDeath, ClusterExhaustedError,
+                                DegradedInfeasibleError, DmaTransient,
+                                FaultError, FaultEvent, FaultSchedule,
+                                LinkDegrade, RecoveryCorruptionError,
+                                VmemShrink)
+
+__all__ = [
+    "ChipDeath",
+    "ClusterExhaustedError",
+    "DegradedInfeasibleError",
+    "DmaTransient",
+    "FaultError",
+    "FaultEvent",
+    "FaultSchedule",
+    "LinkDegrade",
+    "RecoveryCorruptionError",
+    "VmemShrink",
+]

@@ -25,6 +25,26 @@ from typing import Callable, Iterable
 
 
 # --------------------------------------------------------------------- #
+# Typed failures
+# --------------------------------------------------------------------- #
+
+class FaultToleranceError(RuntimeError):
+    """Base class for control-plane misuse/impossibility errors."""
+
+
+class UnknownHostError(FaultToleranceError):
+    """A beat/record arrived from a host the tracker never registered —
+    either a wiring bug or a zombie host that was already evicted.
+    Silently resurrecting it would mask both, so it is an error."""
+
+
+class NoSurvivorsError(FaultToleranceError):
+    """Every host is gone: no mesh can be built.  Raised instead of
+    returning an empty :class:`ElasticPlan` (which callers would loop on
+    forever, restoring and re-planning a zero-host fleet)."""
+
+
+# --------------------------------------------------------------------- #
 # Failure detection
 # --------------------------------------------------------------------- #
 
@@ -37,6 +57,9 @@ class HeartbeatTracker:
         self.last_step: dict[int, int] = {h: -1 for h in hosts}
 
     def beat(self, host: int, step: int) -> None:
+        if host not in self.last_seen:
+            raise UnknownHostError(
+                f"heartbeat from unregistered host {host}")
         self.last_seen[host] = self.clock()
         self.last_step[host] = max(self.last_step.get(host, -1), step)
 
@@ -62,6 +85,9 @@ class StragglerDetector:
         self.count: dict[int, int] = {h: 0 for h in hosts}
 
     def record(self, host: int, step_time_s: float) -> None:
+        if host not in self.ewma:
+            raise UnknownHostError(
+                f"step-time report from unregistered host {host}")
         c = self.count.get(host, 0)
         prev = self.ewma.get(host, 0.0)
         self.ewma[host] = step_time_s if c == 0 else \
@@ -105,7 +131,13 @@ def plan_rescale(alive: Iterable[int], model_shards: int,
     """Largest mesh we can build from the survivors: TP degree is fixed
     (weights layout), the data axis shrinks to the largest multiple that
     the surviving chip count supports."""
+    if model_shards < 1 or chips_per_host < 1:
+        raise FaultToleranceError(
+            f"model_shards and chips_per_host must be >= 1, got "
+            f"{model_shards}/{chips_per_host}")
     hosts = tuple(sorted(alive))
+    if not hosts:
+        raise NoSurvivorsError("no surviving hosts to build a mesh from")
     chips = len(hosts) * chips_per_host
     data = max(1, chips // model_shards)
     # data axis must evenly divide the global batch handling; keep a power
@@ -166,7 +198,13 @@ class TrainSupervisor:
                 step += 1
             except HostFailure as hf:
                 restarts += 1
+                # evict the host from *every* tracker: a dead host left
+                # in the straggler EWMA would keep skewing the fleet
+                # median (and could be flagged) forever after
                 self.hb.last_seen.pop(hf.host, None)
+                self.hb.last_step.pop(hf.host, None)
+                self.straggle.ewma.pop(hf.host, None)
+                self.straggle.count.pop(hf.host, None)
                 if fail_host:
                     fail_host(hf.host)
                 plan = plan_rescale(self.hb.alive_hosts(),

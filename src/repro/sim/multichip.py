@@ -49,7 +49,7 @@ from repro.sim.system import SimReport, System
 LayerReport = Union[SimReport, S2Report]
 
 
-def _carve_shard(full: ConvLayer, shard: ShardPlan) -> ConvLayer:
+def carve_shard(full: ConvLayer, shard: ShardPlan) -> ConvLayer:
     """The shard's sub-problem sliced out of the shared layer data: a
     row band's halo-extended window, a kernel subset, or both at once
     (hybrid grid cells)."""
@@ -67,6 +67,31 @@ def _carve_shard(full: ConvLayer, shard: ShardPlan) -> ConvLayer:
         kernels = kernels[k0:k1]
     return ConvLayer(spec=shard.spec, input=inp.copy(),
                      kernels=kernels.copy())
+
+
+_carve_shard = carve_shard        # pre-PR-9 name, kept for callers
+
+
+def run_shard(full: ConvLayer, shard: ShardPlan, hw, *, check: bool = True,
+              retry_at: "dict[int, int] | None" = None,
+              backoff_base: float = 16.0) -> LayerReport:
+    """Carve ``shard``'s sub-problem out of the shared ``full`` layer and
+    execute it through the single-chip machinery — the one execution path
+    shared by :func:`simulate_multichip` and the fault-injection engine
+    (``repro.resil.engine``), so a faulted re-execution of a shard is the
+    same computation, bit for bit, as its fault-free run.
+
+    ``retry_at`` injects transient DMA failures into S1 runs (see
+    ``System.run``).  S2 shards take no functional injection — a re-read
+    is idempotent either way, so the engine prices their retries
+    analytically and only the duration ledger differs.
+    """
+    layer = carve_shard(full, shard)
+    if isinstance(shard.strategy, S2Strategy):
+        return run_s2(layer, hw, shard.strategy)
+    return System(layer, hw).run(shard.strategy, check=check,
+                                 retry_at=retry_at,
+                                 backoff_base=backoff_base)
 
 
 @dataclasses.dataclass
@@ -156,11 +181,7 @@ def simulate_multichip(plan: MultiChipPlan, seed: int = 0,
         assembled = np.full_like(ref, np.nan)
         reps: list[LayerReport] = []
         for shard in lp.shards:
-            layer = _carve_shard(full, shard)
-            if isinstance(shard.strategy, S2Strategy):
-                rep = run_s2(layer, hw, shard.strategy)
-            else:
-                rep = System(layer, hw).run(shard.strategy, check=check)
+            rep = run_shard(full, shard, hw, check=check)
             reps.append(rep)
             rows = slice(None) if shard.out_rows is None else \
                 slice(*shard.out_rows)

@@ -39,6 +39,9 @@ class SimReport:
     elements_written: int
     total_macs: int
     traces: list[StepTrace]
+    retry_duration: float = 0.0   # injected DMA retries (repro.resil):
+    retry_elements: int = 0       # included in total_duration /
+    #   elements_read; zero on every fault-free run
 
     def summary(self) -> str:
         return (f"steps={len(self.traces)} duration={self.total_duration:g} "
@@ -56,10 +59,24 @@ class System:
         self.hw = hw
 
     def run(self, strategy: GroupedStrategy | list[Step],
-            check: bool = True) -> SimReport:
+            check: bool = True,
+            retry_at: "dict[int, int] | None" = None,
+            backoff_base: float = 16.0) -> SimReport:
+        """Execute the strategy step by step.
+
+        ``retry_at`` injects transient DMA failures (``repro.resil``):
+        step index -> number of failed attempts before the load
+        succeeds.  Each retry re-issues the step's DRAM reads (reads are
+        idempotent — the fetched values are identical, so the output is
+        unchanged) and waits ``backoff_base * 2**(attempt-1)`` cycles;
+        the extra duration and re-read elements are recorded on the
+        step's trace and in ``SimReport.retry_duration`` /
+        ``retry_elements``, on top of the fault-free Def-3 ledger.
+        """
         spec = self.layer.spec
         steps = (strategy.to_steps()
                  if isinstance(strategy, GroupedStrategy) else strategy)
+        retry_at = retry_at or {}
         dram = Dram(self.layer)
         acc = Accelerator(spec, self.hw)
         formal = MemoryState()
@@ -108,14 +125,30 @@ class System:
             write_dur = n_wb * self.hw.t_w
             load_dur = (n_pix + n_ker * kelem) * self.hw.t_l
             acc_dur = self.hw.t_acc if s.computes else 0.0
-            total_duration += write_dur + load_dur + acc_dur
+            # injected transient DMA failures: re-issue this step's reads
+            # (idempotent — values discarded, the resident copies stand)
+            # and pay exponential backoff per failed attempt
+            n_retries = retry_at.get(idx, 0)
+            retry_dur = 0.0
+            retry_read0 = dram.elements_read
+            for attempt in range(1, n_retries + 1):
+                for j in spec.pixels_of_mask(s.i_slice):
+                    h, w = spec.pixel_pos(j)
+                    dram.read_pixel(h, w)
+                for k in spec.pixels_of_mask(s.k_sub):
+                    dram.read_kernel(k)
+                retry_dur += load_dur + backoff_base * 2 ** (attempt - 1)
+            retry_elems = dram.elements_read - retry_read0
+            total_duration += write_dur + load_dur + acc_dur + retry_dur
             traces.append(StepTrace(
                 index=idx, step=s, mem_elements=acc.mem.used,
-                duration=write_dur + load_dur + acc_dur,
+                duration=write_dur + load_dur + acc_dur + retry_dur,
                 load_duration=load_dur, write_duration=write_dur,
                 compute_duration=acc_dur,
                 read_elements=dram.elements_read - read0,
-                written_elements=dram.elements_written - written0))
+                written_elements=dram.elements_written - written0,
+                retries=n_retries, retry_duration=retry_dur,
+                retry_elements=retry_elems))
 
         max_err = 0.0
         ok = True
@@ -135,4 +168,6 @@ class System:
             elements_read=dram.elements_read,
             elements_written=dram.elements_written,
             total_macs=acc.total_macs,
-            traces=traces)
+            traces=traces,
+            retry_duration=sum(t.retry_duration for t in traces),
+            retry_elements=sum(t.retry_elements for t in traces))

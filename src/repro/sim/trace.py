@@ -39,9 +39,14 @@ class StepTrace:
     compute_duration: float = 0.0
     read_elements: int = 0
     written_elements: int = 0
+    retries: int = 0                 # injected DMA transients (repro.resil)
+    retry_duration: float = 0.0      # re-issued loads + exponential backoff
+    retry_elements: int = 0          # elements re-read by the retries
 
     def describe(self, spec: ConvSpec) -> str:
         s = self.step
+        retry = (f" + retry {self.retry_duration:g}x{self.retries}"
+                 if self.retries else "")
         return (f"step {self.index:3d}: "
                 f"free_inp={s.f_inp.bit_count():3d} "
                 f"free_ker={s.f_ker.bit_count():2d} "
@@ -51,7 +56,7 @@ class StepTrace:
                 f"compute={len(s.group):3d}p "
                 f"mem={self.mem_elements:5d} dur={self.duration:g} "
                 f"(wb {self.write_duration:g} + dma {self.load_duration:g}"
-                f" + acc {self.compute_duration:g})")
+                f" + acc {self.compute_duration:g}{retry})")
 
 
 # --------------------------------------------------------------------- #

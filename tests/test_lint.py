@@ -98,6 +98,18 @@ def test_bare_assert_in_kernels_fires_l006(tmp_path):
     assert [f.rule for f in findings] == ["L006 bare-assert"]
 
 
+def test_bare_assert_in_runtime_and_resil_fires_l006(tmp_path):
+    """runtime/ and resil/ joined the L006 scope with the fault-injection
+    subsystem: recovery invariants must raise typed FaultError /
+    FaultToleranceError subclasses, never assert."""
+    for pkg in ("runtime", "resil"):
+        f = tmp_path / pkg / "dev.py"
+        f.parent.mkdir()
+        f.write_text("def f(x):\n    assert x >= 0\n    return x\n")
+        findings = run_lint([f], base=tmp_path)
+        assert [x.rule for x in findings] == ["L006 bare-assert"], pkg
+
+
 def test_asserts_outside_lint_scope_are_allowed(tmp_path):
     m = tmp_path / "models" / "net.py"
     m.parent.mkdir()

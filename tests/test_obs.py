@@ -349,4 +349,4 @@ def test_counters_exported_and_monotone_traffic():
     assert reads == sorted(reads) and reads[-1] > 0
     trace = to_chrome_trace([tl])
     assert any(e["ph"] == "C" for e in trace["traceEvents"])
-    assert len(LANES) == 4
+    assert len(LANES) == 6      # 4 execution lanes + fault + recovery

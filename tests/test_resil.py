@@ -1,0 +1,259 @@
+"""Fault-injection engine tests (``repro.resil``): scenario coverage,
+recovery invariants, the control-plane cross-check, obs integration and
+the CLI exit-code contract.  Deterministic twins live in
+test_resil_basic.py; hypothesis properties in test_resil_props.py."""
+import numpy as np
+import pytest
+
+from repro.configs.clusters import make_cluster
+from repro.configs.networks import NETWORKS
+from repro.obs.adapters import faulted_timeline, multichip_predicted_timeline
+from repro.obs.chrome import to_chrome_trace, validate_chrome_trace
+from repro.obs.report import fault_attribution_rows, fault_overhead_by_lane
+from repro.resil import faultsim
+from repro.resil.controller import ControlPlaneError, RecoveryController
+from repro.resil.degrade import surviving_topology
+from repro.resil.engine import run_faulted
+from repro.resil.faults import (ChipDeath, ClusterExhaustedError,
+                                DmaTransient, FaultSchedule,
+                                FaultScheduleError, LinkDegrade, VmemShrink)
+
+FAST = dict(polish_iters=60, polish_restarts=1)
+
+
+def _cluster(network, topology, n_chips):
+    size_mem = max(s.kernel_elements for s in NETWORKS[network]) // 2
+    return make_cluster(n_chips, size_mem=size_mem, topology=topology)
+
+
+def _run(network, topology, n_chips, schedule, **kw):
+    kw = {**FAST, **kw}
+    return run_faulted(NETWORKS[network], _cluster(network, topology,
+                                                   n_chips),
+                       schedule, name=network, **kw)
+
+
+# ------------------------------ scenarios ------------------------------ #
+
+def test_chip_death_recovers_on_degraded_topology():
+    sch = FaultSchedule(seed=0, events=(ChipDeath(layer=1, chip=2),))
+    rep = _run("tight4", "torus2x2", 4, sch)
+    assert rep.ok and rep.recovery_exact and rep.write_counts_ok
+    assert rep.no_free_lunch
+    wasted = [a for a in rep.attempts if a.wasted]
+    assert len(wasted) == 1 and wasted[0].dead_chip == 2
+    assert wasted[0].detection == sch.detection_cycles
+    (rec,) = rep.recoveries
+    assert rec.kind == "chip_death" and rec.n_chips == 3
+    assert "ring" in rec.new_topology          # 3 chips: no sub-torus
+    assert rec.restage_elements > 0 and rec.verified
+    assert rec.elastic is not None
+    assert rec.elastic.hosts == (0, 1, 3)      # physical survivors
+    assert rep.recomputed_elements == \
+        NETWORKS["tight4"][1].num_patches * NETWORKS["tight4"][1].c_out
+    # every layer committed exactly once despite the wasted attempt
+    assert all(c is not None and not np.any(np.isnan(c))
+               for c in rep.committed)
+
+
+def test_link_degrade_replans_without_recompute():
+    sch = FaultSchedule(seed=0, events=(LinkDegrade(layer=1, factor=3.0),))
+    rep = _run("tight4", "torus2x2", 4, sch)
+    assert rep.ok and not any(a.wasted for a in rep.attempts)
+    (rec,) = rep.recoveries
+    assert rec.kind == "link_degrade"
+    assert rep.recomputed_elements == 0
+    # no recompute, but the re-plan still restages its input: a suffix
+    # plan assumes the replicated input layout, and without paying for
+    # it a degraded re-plan could beat the fault-free baseline
+    assert rec.restage_cycles > 0
+    assert rep.plans[1].cluster.t_ici == rep.plans[0].cluster.t_ici * 3.0
+    assert rep.faulted_duration >= rep.baseline_duration - 1e-6
+
+
+def test_vmem_shrink_replans_under_tighter_budget():
+    sch = FaultSchedule(seed=0, events=(VmemShrink(layer=1, factor=0.75),))
+    rep = _run("tight4", "torus2x2", 4, sch)
+    assert rep.ok
+    (rec,) = rep.recoveries
+    assert rec.kind == "vmem_shrink"
+    assert rep.plans[1].cluster.chip.size_mem == \
+        int(rep.plans[0].cluster.chip.size_mem * 0.75)
+
+
+def test_dma_transient_pure_duration_fault():
+    sch = FaultSchedule(seed=0, events=(
+        DmaTransient(layer=0, chip=1, step=1, retries=2),))
+    rep = _run("tight4", "torus2x2", 4, sch)
+    assert rep.ok and not rep.recoveries
+    assert rep.retry_cycles > 0
+    # values unchanged, only the ledger moved: exactly the retry cost
+    assert rep.faulted_duration == pytest.approx(
+        rep.baseline_duration + rep.retry_cycles)
+
+
+def test_combined_boundary_faults_single_replan():
+    sch = FaultSchedule(seed=0, events=(LinkDegrade(layer=2, factor=2.0),
+                                        VmemShrink(layer=2, factor=0.9)))
+    rep = _run("tight4", "torus2x2", 4, sch)
+    assert rep.ok and len(rep.recoveries) == 1
+    assert rep.recoveries[0].kind == "link_degrade+vmem_shrink"
+
+
+def test_cluster_exhausted_raises():
+    sch = FaultSchedule(seed=0, events=(ChipDeath(layer=0, chip=1),
+                                        ChipDeath(layer=1, chip=0)))
+    with pytest.raises(ClusterExhaustedError):
+        _run("tight2", "ring", 2, sch)
+
+
+def test_out_of_range_and_missing_slot_events_are_skipped():
+    sch = FaultSchedule(seed=0, events=(
+        ChipDeath(layer=0, chip=9),                 # no such slot
+        DmaTransient(layer=1, chip=7, step=0, retries=1),
+        LinkDegrade(layer=99, factor=2.0)))         # no such layer
+    rep = _run("tight2", "ring", 2, sch)
+    assert rep.ok and not rep.recoveries
+    assert len(rep.skipped_events) == 3
+    assert rep.faulted_duration == pytest.approx(rep.baseline_duration)
+
+
+def test_injected_corruption_is_caught():
+    sch = FaultSchedule(seed=0, events=())
+    rep = _run("tight2", "ring", 2, sch, inject_corruption=1)
+    assert not rep.ok and not rep.recovery_exact
+    assert not rep.write_counts_ok
+    assert any("exactly-once" in f for f in rep.findings)
+    assert any("diverged" in f for f in rep.findings)
+
+
+def test_schedule_validation():
+    with pytest.raises(FaultScheduleError):
+        FaultSchedule(seed=0, events=(LinkDegrade(layer=0, factor=0.5),))
+    with pytest.raises(FaultScheduleError):
+        FaultSchedule(seed=0, events=(VmemShrink(layer=0, factor=1.5),))
+    with pytest.raises(FaultScheduleError):
+        FaultSchedule(seed=0, events=(ChipDeath(layer=-1, chip=0),))
+    with pytest.raises(FaultScheduleError):
+        FaultSchedule(seed=0, events=(
+            DmaTransient(layer=0, chip=0, step=0, retries=0),))
+
+
+def test_random_schedule_keeps_a_survivor():
+    for seed in range(6):
+        sch = FaultSchedule.random(seed, n_layers=4, n_chips=2,
+                                   n_events=5)
+        deaths = [e for e in sch.events if isinstance(e, ChipDeath)]
+        assert len(deaths) <= 1                 # n_chips - 1
+
+
+# ------------------------- surviving topology -------------------------- #
+
+def test_surviving_topology_prefers_sub_torus():
+    from repro.core.cost_model import Topology
+    torus = Topology.parse("torus2x4")
+    assert surviving_topology(torus, 4).kind == "torus"
+    assert surviving_topology(torus, 7).kind == "ring"    # 7 is prime
+    assert surviving_topology(torus, 3).kind == "ring"
+    ring = Topology.parse("ring")
+    assert surviving_topology(ring, 3).kind == "ring"
+
+
+# --------------------------- control plane ----------------------------- #
+
+def test_controller_detects_exactly_the_dead_chip():
+    rc = RecoveryController([0, 1, 2, 3], detection_cycles=100.0)
+    rc.advance(500.0)
+    rc.stage_done([0, 1, 3], stage=0, durations={0: 5.0, 1: 5.0, 3: 9.0})
+    rc.advance(100.0)
+    rc.expect_death(2)                          # silent past the timeout
+    assert rc.dead == [2]
+    assert rc.detect_dead() == []               # reported exactly once
+    # survivors keep beating without tripping anything
+    rc.advance(50.0)
+    rc.stage_done([0, 1, 3], stage=1, durations={})
+    assert rc.detect_dead() == []
+
+
+def test_controller_cross_check_mismatch_raises():
+    rc = RecoveryController([0, 1], detection_cycles=10.0)
+    rc.advance(100.0)                           # both silent -> both dead
+    with pytest.raises(ControlPlaneError):
+        rc.expect_death(0)
+    rc2 = RecoveryController([0, 1], detection_cycles=10.0)
+    rc2.stage_done([0, 1], stage=0, durations={})
+    with pytest.raises(ControlPlaneError):
+        rc2.expect_death(1)                     # nobody actually died
+    with pytest.raises(ControlPlaneError):
+        rc2.advance(-1.0)
+
+
+def test_controller_elastic_plan_over_survivors():
+    rc = RecoveryController([0, 1, 2, 3])
+    plan = rc.elastic_plan([3, 0, 1])
+    assert plan.hosts == (0, 1, 3)
+    assert plan.data_shards == 3 and plan.model_shards == 1
+    assert plan.shard_of_host == {0: 0, 1: 1, 3: 2}
+
+
+# --------------------------- obs integration --------------------------- #
+
+def test_faulted_timeline_exports_valid_trace_with_fault_lanes():
+    sch = FaultSchedule(seed=0, events=(
+        ChipDeath(layer=1, chip=2),
+        DmaTransient(layer=2, chip=0, step=0, retries=1)))
+    rep = _run("tight4", "torus2x2", 4, sch)
+    assert rep.ok
+    pred = multichip_predicted_timeline(rep.plans[0])
+    tl = faulted_timeline(rep)
+    assert any(s.lane == "fault" for s in tl.spans)
+    assert any(s.lane == "recovery" for s in tl.spans)
+    trace = to_chrome_trace([pred, tl])
+    assert validate_chrome_trace(trace) == []
+    # attribution: the recovery lane carries exactly the priced recovery
+    rows = fault_attribution_rows(pred, tl)
+    overhead = fault_overhead_by_lane(rows)
+    assert overhead["recovery"] == pytest.approx(rep.recovery_cycles)
+    assert overhead["fault"] > 0
+
+
+# -------------------------------- CLI ---------------------------------- #
+
+def test_faultsim_cli_exit_codes(tmp_path, capsys):
+    out = str(tmp_path / "trace.json")
+    argv = ["--network", "tight2", "--topology", "ring", "--n-chips",
+            "2", "--seed", "0", "--scenario", "dma-transient",
+            "--iters", "40", "--restarts", "1", "--out", out]
+    assert faultsim.main(argv) == 0
+    assert "faultsim: OK" in capsys.readouterr().out
+    assert faultsim.main(argv + ["--inject-corruption", "0"]) == 1
+    assert "FINDING" in capsys.readouterr().err
+
+
+def test_faultsim_build_schedule_deterministic():
+    a = faultsim.build_schedule("mixed", 7, n_layers=4, n_chips=4)
+    b = faultsim.build_schedule("mixed", 7, n_layers=4, n_chips=4)
+    assert a == b
+    kinds = {type(e) for e in a.events}
+    assert kinds == {ChipDeath, LinkDegrade, DmaTransient}
+
+
+# ------------------- acceptance sweep (all networks) ------------------- #
+
+@pytest.mark.parametrize("topology,n_chips", [("ring", 4),
+                                              ("torus2x2", 4)])
+@pytest.mark.parametrize("network", sorted(NETWORKS))
+def test_every_network_recovers_under_seeded_faults(network, topology,
+                                                    n_chips):
+    """The PR's acceptance gate: every registered network, on ring and
+    torus2x2, recovers with exact stitched outputs and clean verified
+    re-plans under 3 random fault seeds."""
+    specs = NETWORKS[network]
+    for seed in range(3):
+        sch = FaultSchedule.random(seed, n_layers=len(specs),
+                                   n_chips=n_chips, n_events=2)
+        rep = _run(network, topology, n_chips, sch, seed=seed,
+                   verify=True)
+        assert rep.ok, (network, topology, seed, rep.findings)
+        assert rep.recovery_exact and rep.write_counts_ok
+        assert all(r.verified for r in rep.recoveries)

@@ -1,0 +1,157 @@
+"""Deterministic twins for the fault-injection subsystem: the same
+seeded schedule must reproduce the same faulted run bit-for-bit
+(committed bytes + ledger fingerprint), and the retry injection must
+reconcile exactly against the fault-free run."""
+import numpy as np
+import pytest
+
+from repro.configs.clusters import make_cluster
+from repro.configs.networks import NETWORKS
+from repro.core.multichip import plan_multichip_network, replan_suffix
+from repro.resil.degrade import (repriced_cluster, shrunk_cluster,
+                                 surviving_cluster)
+from repro.resil.engine import run_faulted
+from repro.resil.faults import (ChipDeath, ClusterExhaustedError,
+                                DmaTransient, FaultSchedule, LinkDegrade)
+from repro.sim.layer import ConvLayer
+from repro.sim.multichip import carve_shard, run_shard, simulate_multichip
+
+FAST = dict(polish_iters=60, polish_restarts=1)
+
+
+def _cluster(network="tight2", topology="ring", n=2):
+    size_mem = max(s.kernel_elements for s in NETWORKS[network]) // 2
+    return make_cluster(n, size_mem=size_mem, topology=topology)
+
+
+def test_faulted_run_fingerprint_is_reproducible():
+    sch = FaultSchedule.random(3, n_layers=2, n_chips=2, n_events=2)
+    runs = [run_faulted(NETWORKS["tight2"], _cluster(), sch,
+                        name="tight2", **FAST) for _ in range(2)]
+    assert runs[0].fingerprint == runs[1].fingerprint
+    for a, b in zip(runs[0].committed, runs[1].committed):
+        assert np.array_equal(a, b)            # bit-for-bit
+
+
+def test_different_seed_changes_schedule():
+    a = FaultSchedule.random(0, n_layers=4, n_chips=4, n_events=3)
+    b = FaultSchedule.random(0, n_layers=4, n_chips=4, n_events=3)
+    c = FaultSchedule.random(1, n_layers=4, n_chips=4, n_events=3)
+    assert a == b
+    assert a.events != c.events
+    assert "seed=0" in a.describe()
+
+
+def test_fault_free_schedule_reproduces_the_plain_simulation():
+    """Zero events: the engine must agree with simulate_multichip both
+    on the ledger and on every committed element."""
+    specs = NETWORKS["tight2"]
+    cluster = _cluster()
+    sch = FaultSchedule(seed=0, events=())
+    rep = run_faulted(specs, cluster, sch, name="tight2", **FAST)
+    assert rep.ok and not rep.recoveries
+    assert rep.faulted_duration == pytest.approx(rep.baseline_duration)
+    plan = plan_multichip_network(specs, cluster, name="tight2",
+                                  include_single_chip_baseline=False,
+                                  **FAST)
+    sim = simulate_multichip(plan, seed=0)
+    assert plan.total_duration == pytest.approx(rep.baseline_duration)
+    assert sim.correct and sim.accounting_exact
+
+
+def test_retry_injection_reconciles_exactly():
+    """run_shard with retries = the fault-free run + the priced retry
+    duration, with identical output values (reads are idempotent)."""
+    specs = NETWORKS["tight2"]
+    cluster = _cluster()
+    plan = plan_multichip_network(specs, cluster, name="tight2",
+                                  include_single_chip_baseline=False,
+                                  **FAST)
+    lp = plan.layers[0]
+    full = ConvLayer.random(lp.spec, seed=0)
+    shard = next(s for s in lp.shards if s.mode == "s1")
+    base = run_shard(full, shard, cluster.chip)
+    retried = run_shard(full, shard, cluster.chip,
+                        retry_at={0: 2}, backoff_base=16.0)
+    assert np.array_equal(base.output, retried.output)
+    assert retried.retry_duration > 0
+    assert retried.total_duration == pytest.approx(
+        base.total_duration + retried.retry_duration)
+    assert retried.elements_read == \
+        base.elements_read + retried.retry_elements
+    # carve_shard is the shared (and public) carving path
+    carved = carve_shard(full, shard)
+    assert carved.spec == shard.spec
+
+
+def test_degraded_cluster_constructors():
+    cluster = _cluster("tight4", "torus2x2", 4)
+    surv = surviving_cluster(cluster)
+    assert surv.n_chips == 3 and surv.topo.kind == "ring"
+    assert repriced_cluster(cluster, 2.0).t_ici == cluster.t_ici * 2.0
+    shrunk = shrunk_cluster(cluster, 0.5)
+    assert shrunk.chip.size_mem == cluster.chip.size_mem // 2
+    one = surviving_cluster(_cluster(), n_dead=1)
+    assert one.n_chips == 1
+    with pytest.raises(ClusterExhaustedError):
+        surviving_cluster(one)
+
+
+def test_replan_suffix_plans_the_tail_only():
+    specs = NETWORKS["tight4"]
+    cluster = _cluster("tight4", "torus2x2", 4)
+    tail = replan_suffix(specs, cluster, start=2, name="tight4", **FAST)
+    assert len(tail.layers) == 2
+    assert [lp.spec for lp in tail.layers] == list(specs[2:])
+    with pytest.raises(ValueError):
+        replan_suffix(specs, cluster, start=4, name="tight4", **FAST)
+
+
+def test_recovery_ledger_is_deterministic_pricing():
+    """Chip-death recovery cost = replan rate x remaining layers +
+    restage at t_l per input element — no wall-clock in the ledger."""
+    sch = FaultSchedule(seed=0, events=(ChipDeath(layer=1, chip=0),),
+                        detection_cycles=128.0,
+                        replan_cycles_per_layer=32.0)
+    specs = NETWORKS["tight2"]
+    rep = run_faulted(specs, _cluster(), sch, name="tight2", **FAST)
+    (rec,) = rep.recoveries
+    assert rec.replan_cycles == 32.0 * (len(specs) - 1)
+    spec = specs[1]
+    assert rec.restage_cycles == pytest.approx(
+        spec.num_pixels * spec.c_in * rep.plans[1].cluster.chip.t_l)
+    (wasted,) = [a for a in rep.attempts if a.wasted]
+    assert wasted.detection == 128.0
+    assert rep.faulted_duration == pytest.approx(
+        sum(a.total for a in rep.attempts)
+        + sum(r.total for r in rep.recoveries)
+        + rep.plans[-1].final_gather_duration)
+
+
+def test_dma_backoff_is_exponential():
+    sch1 = FaultSchedule(seed=0, events=(
+        DmaTransient(layer=0, chip=0, step=0, retries=1),),
+        backoff_base_cycles=16.0)
+    sch3 = FaultSchedule(seed=0, events=(
+        DmaTransient(layer=0, chip=0, step=0, retries=3),),
+        backoff_base_cycles=16.0)
+    specs = NETWORKS["tight2"]
+    r1 = run_faulted(specs, _cluster(), sch1, name="tight2", **FAST)
+    r3 = run_faulted(specs, _cluster(), sch3, name="tight2", **FAST)
+    # backoff sums 16*(2^n - 1); the load re-reads scale linearly
+    b1 = r1.retry_cycles - 16.0 * 1
+    b3 = r3.retry_cycles - 16.0 * 7
+    assert b1 > 0 and b3 == pytest.approx(3 * b1)
+
+
+def test_link_degrade_and_death_compose():
+    sch = FaultSchedule(seed=0, events=(LinkDegrade(layer=0, factor=2.0),
+                                        ChipDeath(layer=1, chip=1)))
+    rep = run_faulted(NETWORKS["tight4"],
+                      _cluster("tight4", "torus2x2", 4), sch,
+                      name="tight4", **FAST)
+    assert rep.ok and len(rep.recoveries) == 2
+    assert [r.kind for r in rep.recoveries] == ["link_degrade",
+                                                "chip_death"]
+    # the death's re-plan keeps the degraded link price
+    assert rep.plans[2].cluster.t_ici == rep.plans[0].cluster.t_ici * 2.0
