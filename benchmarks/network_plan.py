@@ -38,6 +38,14 @@ link-degradation scenarios (each run twice for bit-for-bit determinism,
 verification forced on), pinning ``recovery_exact`` /
 ``degraded_slowdown`` into the summary and the exit code.
 
+Every run also executes the plan-cache canary: a cold-then-warm double
+pass of a networks x {ring, torus2x2} x budget-point sweep through the
+persistent ``repro.plancache`` store (a throwaway directory, via
+``repro.launch.plan_server``), pinning ``plan_cache_warm_speedup`` and
+``plan_cache_hit_rate`` into the summary and the exit code — the warm
+pass must be bit-identical (plan fingerprints), verifier-clean, and
+beat the amortisation floor (5x full scope, 1.2x ``--fast``).
+
 Full-scope runs (no ``--fast``, no ``--networks`` filter) also refresh
 ``BENCH_network_plan.json`` at the repo root — a stable, compact summary
 (per-network duration, gain_vs_baseline, wall-clock, chip-scaling points)
@@ -143,7 +151,11 @@ def _kerncheck_clean(networks: list[str]) -> bool:
 
 
 def _record_lru_stats() -> None:
-    """Mirror the solver LRU counters into the obs metrics registry."""
+    """Mirror the solver LRU counters into the obs metrics registry.
+    ``evictions`` is ``misses - currsize`` (exact within a clear-epoch:
+    main() clears both LRUs at start): nonzero means the sweep visited
+    more distinct keys than ``maxsize`` holds and silently re-solved —
+    raise ``REPRO_SOLVE_CACHE_SIZE`` (0 = unbounded) to stop the thrash."""
     for name, info in (("solve_cached", solver.solve_cached.cache_info()),
                        ("best_s2_cached",
                         solver.best_s2_cached.cache_info())):
@@ -151,6 +163,9 @@ def _record_lru_stats() -> None:
         REGISTRY.set(f"lru/{name}/misses", info.misses)
         REGISTRY.set(f"lru/{name}/hit_rate",
                      round(info.hits / max(1, info.hits + info.misses), 4))
+        REGISTRY.set(f"lru/{name}/evictions",
+                     max(0, info.misses - info.currsize))
+        REGISTRY.set(f"lru/{name}/maxsize", info.maxsize or 0)
 
 
 def build_profile() -> dict:
@@ -170,7 +185,9 @@ def build_profile() -> dict:
         "lru": {
             name: {"hits": int(REGISTRY.get(f"lru/{name}/hits")),
                    "misses": int(REGISTRY.get(f"lru/{name}/misses")),
-                   "hit_rate": REGISTRY.get(f"lru/{name}/hit_rate")}
+                   "hit_rate": REGISTRY.get(f"lru/{name}/hit_rate"),
+                   "evictions": int(REGISTRY.get(f"lru/{name}/evictions")),
+                   "maxsize": int(REGISTRY.get(f"lru/{name}/maxsize"))}
             for name in ("solve_cached", "best_s2_cached")},
     }
     planner = REGISTRY.snapshot("planner")
@@ -265,6 +282,111 @@ def run_fault_canary(*, iters: int, restarts: int, rng_seed: int,
         "recovery_exact": all(r["recovery_exact"] for r in rows),
         "degraded_slowdown": max(r["degraded_slowdown"] for r in rows),
         "ok": all(r["ok"] for r in rows),
+    }
+
+
+#: Topology axis of the plan-cache canary sweep — ring (the PR-3
+#: baseline wiring) plus the 2x2 torus that exercises the hybrid modes.
+CACHE_TOPOLOGIES = ("ring", "torus2x2")
+
+
+def run_cache_canary(*, networks: list, iters: int, restarts: int,
+                     rng_seed: int, nbop_pe: int, fast: bool) -> dict:
+    """Cold-then-warm double pass through the persistent plan cache
+    (``repro.plancache`` behind ``repro.launch.plan_server``): sweep
+    networks x {ring, torus2x2} x budget points into a throwaway store,
+    clear the in-memory LRUs, and replay the identical sweep.  Pins
+    ``plan_cache_warm_speedup`` and ``plan_cache_hit_rate`` (folded into
+    the exit code): the warm pass must answer from the store, at least
+    ``min_speedup`` x faster, bit-identical (plan fingerprints), and
+    verifier-clean.  Runs in its own timer/store and restores the env,
+    so it never pollutes the planner profile or a user-configured
+    cache."""
+    import shutil
+    import tempfile
+
+    from repro.launch.plan_server import PlanService
+    from repro.plancache import store as plan_store
+
+    if fast:
+        nets = sorted(n for n in networks if n in ("lenet5", "tight2")) \
+            or ["tight2"]
+        budgets = {n: budget_points(NETWORKS[n])[-2:] for n in nets}
+    else:
+        nets = sorted(networks)
+        budgets = {n: budget_points(NETWORKS[n]) for n in nets}
+    chip_counts = (1, 4)              # 4 so torus2x2 exists
+
+    prev_root = os.environ.get(plan_store.ENV_VAR)
+    tmp = tempfile.mkdtemp(prefix="plancache-canary-")
+    try:
+        plan_store.configure(tmp)
+        service = PlanService()
+
+        # server-grade knobs: the canary measures the cache, not plan
+        # quality — sweep-query polish budgets keep the cold pass
+        # tractable at full scope (plan_server's own defaults)
+        canary_iters = min(iters, 600)
+
+        def run_pass() -> tuple[list, float]:
+            solver.solve_cached.cache_clear()
+            solver.best_s2_cached.cache_clear()
+            t0 = time.perf_counter()
+            rows = []
+            for n in nets:
+                rows.extend(service.sweep(
+                    n, budgets=budgets[n], topologies=CACHE_TOPOLOGIES,
+                    chip_counts=chip_counts, nbop_pe=nbop_pe,
+                    polish_iters=canary_iters, polish_restarts=1,
+                    rng_seed=rng_seed))
+            return rows, time.perf_counter() - t0
+
+        with REGISTRY.timer("bench/cache_canary_s"):
+            store = plan_store.active_store()
+            cold_rows, cold_s = run_pass()
+            hits0, misses0 = store.hits, store.misses
+            warm_rows, warm_s = run_pass()
+            warm_hits = store.hits - hits0
+            warm_misses = store.misses - misses0
+    finally:
+        if prev_root is None:
+            plan_store.configure(None)
+        else:
+            plan_store.configure(prev_root)
+        plan_store.reset()
+        shutil.rmtree(tmp, ignore_errors=True)
+        solver.solve_cached.cache_clear()
+        solver.best_s2_cached.cache_clear()
+
+    speedup = cold_s / max(warm_s, 1e-9)
+    hit_rate = warm_hits / max(1, warm_hits + warm_misses)
+    bit_identical = len(cold_rows) == len(warm_rows) and all(
+        c["feasible"] == w["feasible"]
+        and c.get("fingerprint") == w.get("fingerprint")
+        for c, w in zip(cold_rows, warm_rows))
+    verified = all(r["verified"] for r in cold_rows + warm_rows
+                   if r["feasible"])
+    # a --fast cold pass is already seconds-cheap, so the amortisation
+    # floor is relaxed there; full runs must clear the ISSUE-10 5x bar
+    min_speedup = 1.2 if fast else 5.0
+    ok = bit_identical and verified and speedup >= min_speedup
+    if not ok:
+        print(f"[plancache] canary FAIL: speedup {speedup:.1f}x "
+              f"(floor {min_speedup}x), bit_identical={bit_identical}, "
+              f"verified={verified}", file=sys.stderr)
+    return {
+        "networks": nets,
+        "topologies": list(CACHE_TOPOLOGIES),
+        "chip_counts": list(chip_counts),
+        "scenarios": len(cold_rows),
+        "cold_seconds": round(cold_s, 4),
+        "warm_seconds": round(warm_s, 4),
+        "plan_cache_warm_speedup": round(speedup, 2),
+        "plan_cache_hit_rate": round(hit_rate, 4),
+        "min_speedup": min_speedup,
+        "bit_identical": bit_identical,
+        "verified": verified,
+        "ok": ok,
     }
 
 
@@ -448,7 +570,8 @@ def write_bench_summary(path: str, rows: list[dict],
                         profile: dict | None = None,
                         kerncheck_clean: bool = True,
                         obs_canary: dict | None = None,
-                        fault_canary: dict | None = None) -> None:
+                        fault_canary: dict | None = None,
+                        cache_canary: dict | None = None) -> None:
     """Stable repo-root summary: the perf-trajectory file other PRs diff.
     ``planner_seconds`` and ``gain_vs_pr3`` are the stable trajectory
     keys (baseline: the frozen ``PR3_BASELINE`` table);
@@ -513,6 +636,15 @@ def write_bench_summary(path: str, rows: list[dict],
                   "no_free_lunch", "degraded_slowdown", "replans", "ok")}
                 for r in fault_canary["scenarios"]],
         }
+    if cache_canary is not None:
+        summary["plan_cache_warm_speedup"] = \
+            cache_canary["plan_cache_warm_speedup"]
+        summary["plan_cache_hit_rate"] = cache_canary["plan_cache_hit_rate"]
+        summary["cache_canary"] = {
+            k: cache_canary[k] for k in
+            ("networks", "topologies", "chip_counts", "scenarios",
+             "cold_seconds", "warm_seconds", "plan_cache_warm_speedup",
+             "plan_cache_hit_rate", "bit_identical", "verified", "ok")}
     if profile is not None:
         summary["profile"] = profile
     with open(path, "w") as f:
@@ -647,6 +779,11 @@ def main(argv=None) -> int:
         fault_canary = run_fault_canary(
             iters=args.iters, restarts=args.restarts,
             rng_seed=args.rng_seed)
+    # after the profile is built: the canary's throwaway store and LRU
+    # clears must not pollute the planner trajectory numbers
+    cache_canary = run_cache_canary(
+        networks=networks, iters=args.iters, restarts=args.restarts,
+        rng_seed=args.rng_seed, nbop_pe=args.nbop_pe, fast=args.fast)
     result = {"hw": {"nbop_pe": args.nbop_pe, "size_mem": args.size_mem,
                      "t_l": hw.t_l, "t_w": hw.t_w, "t_acc": hw.t_acc},
               "polish": {"iters": args.iters, "restarts": args.restarts},
@@ -663,6 +800,10 @@ def main(argv=None) -> int:
         result["fault_canary"] = fault_canary
         result["recovery_exact"] = fault_canary["recovery_exact"]
         result["degraded_slowdown"] = fault_canary["degraded_slowdown"]
+    result["cache_canary"] = cache_canary
+    result["plan_cache_warm_speedup"] = \
+        cache_canary["plan_cache_warm_speedup"]
+    result["plan_cache_hit_rate"] = cache_canary["plan_cache_hit_rate"]
     if profile is not None:
         result["profile"] = profile
     if out_dir:
@@ -674,7 +815,8 @@ def main(argv=None) -> int:
                             sweeps=sweeps, profile=profile,
                             kerncheck_clean=kerncheck_clean,
                             obs_canary=obs_canary,
-                            fault_canary=fault_canary)
+                            fault_canary=fault_canary,
+                            cache_canary=cache_canary)
 
     for r in rows:
         if not r["feasible"]:
@@ -730,13 +872,21 @@ def main(argv=None) -> int:
                   f"slowdown={r['degraded_slowdown']}x "
                   f"({r['replans']} re-plans) -> "
                   f"{'ok' if r['ok'] else 'FAIL'}")
+    print(f"[plancache] canary: {cache_canary['scenarios']} scenarios, "
+          f"cold {cache_canary['cold_seconds']}s -> warm "
+          f"{cache_canary['warm_seconds']}s "
+          f"({cache_canary['plan_cache_warm_speedup']}x, hit rate "
+          f"{cache_canary['plan_cache_hit_rate']:.0%}, "
+          f"bit_identical={cache_canary['bit_identical']}) -> "
+          f"{'ok' if cache_canary['ok'] else 'FAIL'}")
     if profile is not None:
         lru = profile["lru"]
         print(f"[profile] planner {profile['planner_seconds']}s "
               f"(networks {profile['stages']['networks_s']}s, "
               f"mem sweep {profile['stages']['mem_sweep_s']}s, "
               f"chip sweep {profile['stages']['chip_sweep_s']}s); "
-              f"solve LRU {lru['solve_cached']['hit_rate']:.0%} hits, "
+              f"solve LRU {lru['solve_cached']['hit_rate']:.0%} hits "
+              f"({lru['solve_cached']['evictions']} evictions), "
               f"S2 LRU {lru['best_s2_cached']['hit_rate']:.0%} hits")
     print("saved ->", args.out,
           *(["and", args.bench_out] if trajectory_grade else []))
@@ -757,9 +907,14 @@ def main(argv=None) -> int:
               "invariant (exactly-once, exact stitching, accounting, "
               "determinism, or verification) — resil/engine bug",
               file=sys.stderr)
+    if not cache_canary["ok"]:
+        print("[plancache] the cold/warm cache canary failed (speedup "
+              "floor, bit-identicality, or verification) — plancache/"
+              "plan_server bug", file=sys.stderr)
     ok = verifier_clean and kerncheck_clean
     ok = ok and (obs_canary is None or obs_canary["reconciled"])
     ok = ok and (fault_canary is None or fault_canary["ok"])
+    ok = ok and cache_canary["ok"]
     ok = ok and all(r["feasible"] and r["beats_baseline"] for r in rows)
     # the sweep must stay feasible and beat greedy on >= 1 budget point
     for sw in sweeps:

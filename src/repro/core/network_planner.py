@@ -465,10 +465,12 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
     ps = _resolve_ps(specs, hw, p, max_group)
     fn = solve_fn or solver_mod.solve_cached
 
-    hits0 = calls0 = 0
-    if fn is solver_mod.solve_cached:
-        info = solver_mod.solve_cached.cache_info()
-        hits0, calls0 = info.hits, info.hits + info.misses
+    # per-stage cache attribution: snapshot counters around each stage
+    # and report deltas, so interleaved stages (this solve loop, the
+    # refine pass below, a concurrent multichip DP or resil re-plan)
+    # never claim each other's hits
+    track = fn is solver_mod.solve_cached
+    stats0 = solver_mod.cache_stats() if track else None
 
     t0 = time.perf_counter()
     results = []
@@ -485,6 +487,7 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
                 f"->{spec.c_out}): no strategy fits "
                 f"size_mem={hw.size_mem}") from e
     t_solved = time.perf_counter()
+    solve_stats = (solver_mod.cache_stats() - stats0) if track else None
     # feasibility validation: never emit a plan whose peak exceeds the
     # budget (regression guard for custom solve_fn paths too).
     if hw.size_mem is not None:
@@ -505,6 +508,7 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
     # budget tightened to leave room for (a) the full held input map and
     # (b) one minimal halo window, and keep whichever full assembly is
     # cheaper (each capped solve hits the same LRU).
+    refine0 = solver_mod.cache_stats() if track else None
     if allow_reuse and hw.size_mem is not None and fn is \
             solver_mod.solve_cached:
         for i in range(1, len(specs)):
@@ -540,10 +544,10 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
     planning_seconds = time.perf_counter() - t0
 
     cache_hits = solver_calls = 0
-    if fn is solver_mod.solve_cached:
-        info = solver_mod.solve_cached.cache_info()
-        cache_hits = info.hits - hits0
-        solver_calls = (info.hits + info.misses) - calls0
+    if track:
+        refine_stats = solver_mod.cache_stats() - refine0
+        cache_hits = solve_stats.solve_hits + refine_stats.solve_hits
+        solver_calls = solve_stats.solve_calls + refine_stats.solve_calls
 
     # observability hooks: per-stage wall-clocks accumulate in the
     # process-wide metrics registry (lazy import — repro.obs depends on
@@ -554,10 +558,22 @@ def plan_network(specs: Sequence[ConvSpec], hw: HardwareModel,
     REGISTRY.incr("planner/refine_s", planning_seconds - (t_solved - t0))
     REGISTRY.incr("planner/solver_calls", solver_calls)
     REGISTRY.incr("planner/cache_hits", cache_hits)
+    if track:
+        REGISTRY.incr("planner/stage/solve/calls", solve_stats.solve_calls)
+        REGISTRY.incr("planner/stage/solve/hits", solve_stats.solve_hits)
+        REGISTRY.incr("planner/stage/refine/calls",
+                      refine_stats.solve_calls)
+        REGISTRY.incr("planner/stage/refine/hits", refine_stats.solve_hits)
 
+    base0 = solver_mod.cache_stats()
     with REGISTRY.timer("planner/baseline_s"):
         baseline = greedy_network_duration(specs, hw, p=p,
                                            max_group=max_group)
+    # the greedy baseline prices layers through best_s2_cached — its own
+    # attribution window, so it never pollutes the solve/refine hit rates
+    base_stats = solver_mod.cache_stats() - base0
+    REGISTRY.incr("planner/stage/baseline/s2_calls", base_stats.s2_calls)
+    REGISTRY.incr("planner/stage/baseline/s2_hits", base_stats.s2_hits)
     plan = NetworkPlan(
         name=name, hw=hw, layers=tuple(layers),
         total_duration=total, gross_duration=gross_total,

@@ -249,36 +249,55 @@ def _polish_task(args) -> GroupedStrategy:
 
 
 _POOLS: dict[tuple[str, int], concurrent.futures.ProcessPoolExecutor] = {}
+_POOLS_FINAL = False    # set by the atexit shutdown — bars resurrection
 
 
-def shutdown_pools() -> None:
+def shutdown_pools(final: bool = False) -> None:
     """Shut down the long-lived polish pools.  Registered with ``atexit``
     (so pytest / benchmark runs exit promptly instead of joining idle
-    workers) and exposed as a test hook."""
+    workers) and exposed as a test hook.  ``final=True`` (the atexit
+    path) additionally bars later ``polish_multi`` calls from
+    resurrecting a pool mid-interpreter-teardown — they run serially."""
+    global _POOLS_FINAL
+    if final:
+        _POOLS_FINAL = True
     for pool in _POOLS.values():
         pool.shutdown(wait=False, cancel_futures=True)
     _POOLS.clear()
 
 
-atexit.register(shutdown_pools)
+atexit.register(shutdown_pools, final=True)
 
 
-def _polish_pool(max_workers: int) -> concurrent.futures.ProcessPoolExecutor:
-    """Long-lived process pool, one per (start-method, size).
+def _pool_key(max_workers: int) -> tuple[str, int]:
+    """Pool registry key: (start method, size).  Forking a process that
+    already initialised jax's thread pools can deadlock, so spawn is used
+    once jax is loaded — its higher startup cost is exactly what pool
+    reuse amortises.  Computed once per ``polish_multi`` call so a retry
+    after eviction rebuilds the same pool it evicted."""
+    return ("spawn" if "jax" in sys.modules else "fork", max_workers)
 
-    Re-used across solve calls so a network plan pays worker startup once,
-    not once per layer (concurrent.futures joins the workers at exit).
-    Forking a process that already initialised jax's thread pools can
-    deadlock, so spawn is used once jax is loaded — its higher startup
-    cost is exactly what the reuse amortises."""
-    method = "spawn" if "jax" in sys.modules else "fork"
-    key = (method, max_workers)
+
+def _polish_pool(key: tuple[str, int],
+                 ) -> concurrent.futures.ProcessPoolExecutor:
+    """Long-lived process pool for ``key`` — re-used across solve calls so
+    a network plan pays worker startup once, not once per layer
+    (concurrent.futures joins the workers at exit)."""
     pool = _POOLS.get(key)
     if pool is None:
         pool = concurrent.futures.ProcessPoolExecutor(
-            max_workers, mp_context=multiprocessing.get_context(method))
+            key[1], mp_context=multiprocessing.get_context(key[0]))
         _POOLS[key] = pool
     return pool
+
+
+def _evict_pool(key: tuple[str, int]) -> None:
+    """Retire ONE broken pool: shut it down and drop it from the registry
+    so the next request builds a fresh replacement.  Sibling pools (other
+    sizes / start methods) keep their healthy workers."""
+    pool = _POOLS.pop(key, None)
+    if pool is not None:
+        pool.shutdown(wait=False, cancel_futures=True)
 
 
 def polish_multi(seed: GroupedStrategy, p: int, hw: HardwareModel,
@@ -289,19 +308,29 @@ def polish_multi(seed: GroupedStrategy, p: int, hw: HardwareModel,
     streams, fanned out over a process pool (the multi-restart analogue of
     CPLEX running its polishing heuristics in parallel).  Deterministic for
     a fixed ``rng_seed``: the restart seeds are derived from it and the
-    argmin over their results does not depend on scheduling order."""
+    argmin over their results does not depend on scheduling order.
+
+    A pool that dies mid-run (``BrokenProcessPool``) is evicted and
+    rebuilt once; a second failure falls back to running the same tasks
+    serially, so the returned strategy is identical either way."""
     if restarts <= 1:
         return polish(seed, p, hw, nb_data_reload, iters=iters,
                       rng_seed=rng_seed)
     tasks = [(seed, p, hw, nb_data_reload, iters, rng_seed + 1_000_003 * i)
              for i in range(restarts)]
-    try:
-        max_workers = workers or min(restarts, os.cpu_count() or 1)
-        results = list(_polish_pool(max_workers).map(_polish_task, tasks))
-    except (OSError, concurrent.futures.process.BrokenProcessPool,
-            RuntimeError):
-        # sandboxed / fork-restricted environments: same seeds, serially
-        _POOLS.clear()
+    results = None
+    if not _POOLS_FINAL:
+        key = _pool_key(workers or min(restarts, os.cpu_count() or 1))
+        for _attempt in range(2):
+            try:
+                results = list(_polish_pool(key).map(_polish_task, tasks))
+                break
+            except (OSError, concurrent.futures.process.BrokenProcessPool,
+                    RuntimeError):
+                _evict_pool(key)
+    if results is None:
+        # sandboxed / fork-restricted environments, a twice-broken pool,
+        # or post-atexit: same seeds, serially
         results = [_polish_task(t) for t in tasks]
     return min(results, key=lambda s: (s.objective(hw), s.max_reloads()))
 
@@ -424,13 +453,82 @@ def s1_max_feasible_p(spec: ConvSpec, p: int, hw: HardwareModel) -> int | None:
     return None
 
 
-@functools.lru_cache(maxsize=256)
-def best_s2_cached(spec: ConvSpec, hw: HardwareModel) -> s2_mod.S2Result:
-    """LRU-cached ``best_s2`` — the planner and the greedy baseline share
-    one S2 search (seed enumeration + joint polish + tiny-grid order
-    MILP) per (spec, hw).  Raises ValueError when even S2 cannot fit
-    ``hw.size_mem``."""
-    return s2_mod.best_s2(spec, hw)
+def _plan_store():
+    """(store, codec) when the persistent plan cache is configured via
+    ``REPRO_PLAN_CACHE``, else (None, None).  Lazy on both the env check
+    and the import: ``repro.core`` never pulls ``repro.plancache`` (or,
+    transitively, ``repro.obs``) unless the layer is actually on."""
+    if not os.environ.get("REPRO_PLAN_CACHE"):
+        return None, None
+    from repro.plancache import codec
+    from repro.plancache import store as store_mod
+    store = store_mod.active_store()
+    if store is None:
+        return None, None
+    return store, codec
+
+
+def _neighbor_rank(key: dict, p: int, hw: HardwareModel) -> tuple:
+    """Scenario distance of a same-family cached key: budget gap first
+    (the axis sweeps vary fastest), then group-size gap."""
+    mem = key["hw"]["size_mem"]
+    d_mem = abs(mem - hw.size_mem) if (
+        mem is not None and hw.size_mem is not None) else float("inf")
+    return (d_mem, abs(key.get("p", p) - p))
+
+
+def _warm_s2(res: s2_mod.S2Result, spec: ConvSpec, hw: HardwareModel,
+             store, codec, key: dict, fam: str) -> s2_mod.S2Result:
+    """Reprice the nearest same-family cached S2 scenarios (same spec,
+    neighbouring budget) as warm seeds for the annealing polish; adopt
+    only a candidate that is feasible AND strictly cheaper, so the warm
+    start can never make a solve worse."""
+    if hw.size_mem is None:
+        return res
+    from repro.plancache.store import CacheCorruptionError
+    ranked = sorted(store.neighbors("s2", fam, exclude_key=key),
+                    key=lambda kr: _neighbor_rank(kr[0], 0, hw))
+    best = res
+    for _nkey, raw in ranked[:2]:
+        try:
+            seed = codec.s2_result_from_json(raw).strategy
+        except CacheCorruptionError:
+            continue
+        if seed.spec != spec:
+            continue
+        store.warm_considered += 1
+        cand = s2_mod.polish_s2(seed, hw, size_mem=hw.size_mem)
+        peak = cand.peak_memory_elements()
+        if peak > hw.size_mem:
+            continue
+        obj = cand.objective(hw)
+        if obj < best.objective - 1e-9:
+            best = dataclasses.replace(
+                best, strategy=cand, objective=obj, peak_memory=peak,
+                milp_status="warm_start")
+            store.warm_adopted += 1
+    return best
+
+
+def _best_s2_impl(spec: ConvSpec, hw: HardwareModel) -> s2_mod.S2Result:
+    """``best_s2`` behind the two cache layers (the in-memory LRU is the
+    ``best_s2_cached`` binding at the bottom of this module) — the
+    planner and the greedy baseline share one S2 search (seed enumeration
+    + joint polish + tiny-grid order MILP) per (spec, hw).  On an LRU
+    miss the persistent store is consulted; on a store miss the nearest
+    cached scenario warm-starts the polish.  Raises ValueError when even
+    S2 cannot fit ``hw.size_mem`` (not cached, matching lru_cache)."""
+    store, codec = _plan_store()
+    if store is None:
+        return s2_mod.best_s2(spec, hw)
+    key, fam = codec.s2_key(spec, hw)
+    hit = store.get("s2", key, fam, codec.s2_result_from_json)
+    if hit is not None:
+        return hit
+    res = _warm_s2(s2_mod.best_s2(spec, hw), spec, hw, store, codec,
+                   key, fam)
+    store.put("s2", key, fam, codec.s2_result_to_json(res))
+    return res
 
 
 def _s2_fallback_result(spec: ConvSpec, hw: HardwareModel) -> SolveResult:
@@ -478,31 +576,15 @@ def _s2_can_beat(spec: ConvSpec, hw: HardwareModel, target: float) -> bool:
     return s2_mod.s2_lower_bound(spec, hw) + wb < target
 
 
-@functools.lru_cache(maxsize=256)
-def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
+def _solve_fresh(spec: ConvSpec, p: int, hw: HardwareModel,
                  nb_data_reload: int = 2,
                  time_limit: float = 30.0,
                  polish_iters: int = 30_000,
                  use_milp: bool = True,
                  rng_seed: int = 0,
                  polish_restarts: int = 1) -> SolveResult:
-    """LRU-cached memory-feasible solve keyed on (spec, p, hw, ...) — the
-    S1/S2 choice is part of the cached entry, so repeated layers resolve
-    their fallback once.  ``hw.size_mem`` participates in the key via the
-    frozen ``HardwareModel``.
-
-    Selection rule — the joint (p, strategy) search under eq. 12: the
-    largest S1 group size that fits the budget is solved; smaller group
-    sizes are probed with cheap heuristic seeds and re-solved only when a
-    probe undercuts the incumbent; and the S2 kernel-group-swapping
-    alternative (seed + polish + tiny-grid MILP) is priced with the same
-    full Def-3 accounting whenever its analytic lower bound could win.
-    The cheapest feasible candidate is returned, so the result never
-    loses to either single-endpoint policy (S1-at-max-p or S2-only) —
-    see tests/test_s2_polish.py.  With ``size_mem=None`` (the paper's
-    Sec-7.1 setting) the behaviour is unchanged: S1 at the requested
-    group size.  ``solve_cached.cache_info()`` exposes the hit counters
-    the network planner reports."""
+    """The cold joint (p, strategy) search — ``solve_cached`` with every
+    cache layer peeled off (see ``_solve_cached_impl`` for layering)."""
     p_fit = s1_max_feasible_p(spec, p, hw)
     if p_fit is None:
         return _s2_fallback_result(spec, hw)
@@ -545,3 +627,214 @@ def solve_cached(spec: ConvSpec, p: int, hw: HardwareModel,
         if s2_res.strategy.full_duration(hw) < best_full:
             best = s2_res
     return best
+
+
+def _warm_solve_result(strat, spec: ConvSpec, hw: HardwareModel,
+                       seed_objective: float) -> SolveResult:
+    """Wrap an adopted warm-start strategy as a ``SolveResult`` (the
+    bound/objective fields re-derived for the *current* scenario)."""
+    if isinstance(strat, GroupedStrategy):
+        return SolveResult(
+            strategy=strat,
+            objective=strat.objective(hw),
+            lower_bound=lower_bound(spec, strat.max_group_size(), hw),
+            seed_objective=seed_objective,
+            milp_status="warm_start",
+            milp_objective=None,
+            polish_objective=strat.objective(hw),
+            reload_ok=True,
+            mode="s1")
+    return SolveResult(
+        strategy=strat,
+        objective=strat.objective(hw),
+        lower_bound=s2_mod.s2_lower_bound(spec, hw),
+        seed_objective=seed_objective,
+        milp_status="warm_start",
+        milp_objective=None,
+        polish_objective=strat.objective(hw),
+        reload_ok=True,
+        mode="s2")
+
+
+def _adopt_warm_neighbors(best: SolveResult, spec: ConvSpec, p: int,
+                          hw: HardwareModel, nb_data_reload: int,
+                          polish_iters: int, rng_seed: int,
+                          store, codec, key: dict, fam: str) -> SolveResult:
+    """Delta re-planning: reprice the nearest same-family cached
+    scenarios (same spec + knobs, neighbouring budget / group size) as
+    warm seeds — a short polish from the cached strategy instead of a
+    full search.  A candidate is adopted only when it is budget- and
+    reload-feasible AND strictly cheaper under full Def-3 accounting, so
+    warm starts preserve the never-worse property of the cold search."""
+    if hw.size_mem is None:
+        return best
+    from repro.plancache.store import CacheCorruptionError
+    ranked = sorted(store.neighbors("solve", fam, exclude_key=key),
+                    key=lambda kr: _neighbor_rank(kr[0], p, hw))
+    best_full = best.strategy.full_duration(hw)
+    for _nkey, raw in ranked[:4]:
+        try:
+            seed = codec.solve_result_from_json(raw).strategy
+        except CacheCorruptionError:
+            continue
+        if seed.spec != spec:
+            continue
+        store.warm_considered += 1
+        if isinstance(seed, GroupedStrategy):
+            if seed.max_group_size() > p:
+                continue
+            cand = polish(seed, seed.max_group_size(), hw, nb_data_reload,
+                          iters=min(polish_iters, 2_000), rng_seed=rng_seed)
+            if cand.peak_footprint_elements() > hw.size_mem or \
+                    cand.max_reloads() > nb_data_reload:
+                continue
+        else:
+            cand = s2_mod.polish_s2(seed, hw, size_mem=hw.size_mem,
+                                    rng_seed=rng_seed)
+            if cand.peak_memory_elements() > hw.size_mem:
+                continue
+        cand_full = cand.full_duration(hw)
+        if cand_full < best_full - 1e-9:
+            best = _warm_solve_result(cand, spec, hw, best.seed_objective)
+            best_full = cand_full
+            store.warm_adopted += 1
+    return best
+
+
+def _solve_cached_impl(spec: ConvSpec, p: int, hw: HardwareModel,
+                       nb_data_reload: int = 2,
+                       time_limit: float = 30.0,
+                       polish_iters: int = 30_000,
+                       use_milp: bool = True,
+                       rng_seed: int = 0,
+                       polish_restarts: int = 1) -> SolveResult:
+    """Cached memory-feasible solve keyed on (spec, p, hw, ...) — the
+    S1/S2 choice is part of the cached entry, so repeated layers resolve
+    their fallback once.  ``hw.size_mem`` participates in the key via the
+    frozen ``HardwareModel``.
+
+    Two cache layers.  The in-memory LRU (the ``solve_cached`` binding at
+    the bottom of this module; maxsize from ``REPRO_SOLVE_CACHE_SIZE``,
+    default 256) preserves the historical ``cache_info()`` /
+    ``cache_clear()`` semantics.  On an LRU miss, the persistent
+    content-hashed store (``repro.plancache``, enabled by
+    ``REPRO_PLAN_CACHE``) is consulted: an exact-key hit is returned
+    bit-identically; a miss runs the cold search below, then tries the
+    nearest same-family cached scenario as a warm seed
+    (``_adopt_warm_neighbors``) and persists the winner.
+
+    Selection rule — the joint (p, strategy) search under eq. 12: the
+    largest S1 group size that fits the budget is solved; smaller group
+    sizes are probed with cheap heuristic seeds and re-solved only when a
+    probe undercuts the incumbent; and the S2 kernel-group-swapping
+    alternative (seed + polish + tiny-grid MILP) is priced with the same
+    full Def-3 accounting whenever its analytic lower bound could win.
+    The cheapest feasible candidate is returned, so the result never
+    loses to either single-endpoint policy (S1-at-max-p or S2-only) —
+    see tests/test_s2_polish.py.  With ``size_mem=None`` (the paper's
+    Sec-7.1 setting) the behaviour is unchanged: S1 at the requested
+    group size.  ``solve_cached.cache_info()`` exposes the hit counters
+    the network planner reports; ``cache_stats()`` snapshots every layer
+    at once for per-stage delta attribution."""
+    store, codec = _plan_store()
+    if store is None:
+        return _solve_fresh(spec, p, hw, nb_data_reload=nb_data_reload,
+                            time_limit=time_limit,
+                            polish_iters=polish_iters, use_milp=use_milp,
+                            rng_seed=rng_seed,
+                            polish_restarts=polish_restarts)
+    key, fam = codec.solve_key(
+        spec, p, hw, nb_data_reload=nb_data_reload, time_limit=time_limit,
+        polish_iters=polish_iters, use_milp=use_milp, rng_seed=rng_seed,
+        polish_restarts=polish_restarts)
+    hit = store.get("solve", key, fam, codec.solve_result_from_json)
+    if hit is not None:
+        return hit
+    best = _solve_fresh(spec, p, hw, nb_data_reload=nb_data_reload,
+                        time_limit=time_limit, polish_iters=polish_iters,
+                        use_milp=use_milp, rng_seed=rng_seed,
+                        polish_restarts=polish_restarts)
+    best = _adopt_warm_neighbors(best, spec, p, hw, nb_data_reload,
+                                 polish_iters, rng_seed, store, codec,
+                                 key, fam)
+    store.put("solve", key, fam, codec.solve_result_to_json(best))
+    return best
+
+
+# --------------------------------------------------------------------- #
+# Cache bindings and observability
+# --------------------------------------------------------------------- #
+
+def _resolve_cache_size() -> int | None:
+    """LRU maxsize from ``REPRO_SOLVE_CACHE_SIZE`` (default 256; a value
+    <= 0 means unbounded).  Sweeps that visit more than maxsize distinct
+    (spec, p, hw) keys silently thrash the LRU — the eviction counts in
+    the benchmark's ``--profile`` output make that visible, and this knob
+    is the fix."""
+    raw = os.environ.get("REPRO_SOLVE_CACHE_SIZE", "").strip()
+    if not raw:
+        return 256
+    try:
+        size = int(raw)
+    except ValueError:
+        return 256
+    return None if size <= 0 else size
+
+
+def reconfigure_caches() -> None:    # lint: public-api
+    """Rebind ``solve_cached`` / ``best_s2_cached`` with the LRU size
+    currently in ``REPRO_SOLVE_CACHE_SIZE``.  Both in-memory caches are
+    dropped; the persistent store is untouched.  Callers that captured
+    the old binding keep a working (stale-sized) cache — everything that
+    resolves ``solver.solve_cached`` as an attribute sees the new one."""
+    global solve_cached, best_s2_cached
+    size = _resolve_cache_size()
+    solve_cached = functools.lru_cache(maxsize=size)(_solve_cached_impl)
+    best_s2_cached = functools.lru_cache(maxsize=size)(_best_s2_impl)
+
+
+solve_cached = functools.lru_cache(maxsize=_resolve_cache_size())(
+    _solve_cached_impl)
+best_s2_cached = functools.lru_cache(maxsize=_resolve_cache_size())(
+    _best_s2_impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    """Point-in-time snapshot of every planner cache counter, closed
+    under subtraction: ``after - before`` is the per-stage delta, which
+    is how interleaved stages (solve loop, refine pass, multichip DP,
+    resil re-plan) attribute hits without claiming each other's."""
+    solve_hits: int = 0
+    solve_misses: int = 0
+    s2_hits: int = 0
+    s2_misses: int = 0
+    store_hits: int = 0
+    store_misses: int = 0
+
+    def __sub__(self, other: "CacheStats") -> "CacheStats":
+        return CacheStats(*(a - b for a, b in
+                            zip(dataclasses.astuple(self),
+                                dataclasses.astuple(other))))
+
+    @property
+    def solve_calls(self) -> int:
+        return self.solve_hits + self.solve_misses
+
+    @property
+    def s2_calls(self) -> int:
+        return self.s2_hits + self.s2_misses
+
+
+def cache_stats() -> CacheStats:
+    """Current counters across both LRUs and the persistent store (zeros
+    when the store is disabled).  Snapshot before a stage, subtract
+    after."""
+    si = solve_cached.cache_info()
+    s2i = best_s2_cached.cache_info()
+    store, _codec = _plan_store()
+    return CacheStats(
+        solve_hits=si.hits, solve_misses=si.misses,
+        s2_hits=s2i.hits, s2_misses=s2i.misses,
+        store_hits=store.hits if store is not None else 0,
+        store_misses=store.misses if store is not None else 0)

@@ -61,6 +61,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.conv_spec import ConvSpec
+from repro.core import solver as solver_mod
 from repro.core.cost_model import ClusterModel
 from repro.core.multichip import (MultiChipLayerPlan, MultiChipPlan,
                                   plan_multichip_network, replan_suffix)
@@ -118,6 +119,8 @@ class RecoveryAction:
     elastic: "object | None" = None   # ElasticPlan (chip death only)
     planning_seconds: float = 0.0     # wall-clock, NOT in the ledger
     verified: bool = False
+    solver_calls: int = 0             # this re-plan's own window only
+    cache_hits: int = 0               # (LRU + persistent-store warmth)
 
     @property
     def total(self) -> float:
@@ -313,6 +316,7 @@ def run_faulted(specs: Sequence[ConvSpec], cluster: ClusterModel,
                 restage_elems: int = 0) -> RecoveryAction:
         nonlocal cur_plan, off, cur_cluster, hw
         wall0 = time.perf_counter()
+        stats0 = solver_mod.cache_stats()
         try:
             cur_plan = replan_suffix(specs, new_cluster, start=gi,
                                      name=name, verify=do_verify,
@@ -329,6 +333,14 @@ def run_faulted(specs: Sequence[ConvSpec], cluster: ClusterModel,
             raise
         off, cur_cluster, hw = gi, new_cluster, new_cluster.chip
         plans.append(cur_plan)
+        # delta attribution: only this re-plan's window, so recovery hit
+        # rates never claim the fault-free plan's (or each other's) hits
+        replan_stats = solver_mod.cache_stats() - stats0
+        from repro.obs.metrics import REGISTRY
+        REGISTRY.incr("planner/stage/resil_replan/calls",
+                      replan_stats.solve_calls)
+        REGISTRY.incr("planner/stage/resil_replan/hits",
+                      replan_stats.solve_hits)
         replan_cost = schedule.replan_cycles_per_layer * (n_layers - gi)
         restage_cost = restage_elems * hw.t_l
         rec = RecoveryAction(
@@ -339,7 +351,9 @@ def run_faulted(specs: Sequence[ConvSpec], cluster: ClusterModel,
             new_topology=new_cluster.topo.describe(),
             n_chips=new_cluster.n_chips,
             planning_seconds=time.perf_counter() - wall0,
-            verified=do_verify)
+            verified=do_verify,
+            solver_calls=replan_stats.solve_calls,
+            cache_hits=replan_stats.solve_hits)
         recoveries.append(rec)
         return rec
 

@@ -327,8 +327,10 @@ def test_profile_keys_byte_stable_vs_pr3_vocabulary():
         {"networks_s", "mem_sweep_s", "chip_sweep_s"}
     assert set(profile["lru"]) == {"solve_cached", "best_s2_cached"}
     for lru in profile["lru"].values():
-        assert set(lru) == {"hits", "misses", "hit_rate"}
+        assert set(lru) == {"hits", "misses", "hit_rate",
+                            "evictions", "maxsize"}
         assert isinstance(lru["hits"], int)
+        assert isinstance(lru["evictions"], int)
     # the planner hooks fire on every plan_network call
     bench.REGISTRY.clear()
     plan_network([SPEC], BIG, name="one", polish_iters=40,

@@ -1,0 +1,123 @@
+"""Plan server (``repro.launch.plan_server``): sweep queries answered
+from the persistent cache, verified and bit-identical warm vs cold
+(ISSUE 10)."""
+import json
+import os
+
+import pytest
+
+from repro.configs.networks import NETWORKS
+from repro.configs.tight import budget_points
+from repro.core import solver
+from repro.launch import plan_server
+from repro.launch.plan_server import PlanQuery, PlanService, resolve_topology
+from repro.plancache import store as store_mod
+
+
+@pytest.fixture
+def plan_cache(tmp_path):
+    prev = os.environ.get(store_mod.ENV_VAR)
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+    store = store_mod.configure(tmp_path / "cache")
+    yield store
+    if prev is None:
+        store_mod.configure(None)
+    else:
+        store_mod.configure(prev)
+    store_mod.reset()
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+
+
+def _budgets(network, n=2):
+    return budget_points(NETWORKS[network])[-n:]
+
+
+# ------------------------------------------------------------------ #
+# Topology resolution / sweep shape
+# ------------------------------------------------------------------ #
+
+def test_resolve_topology_grid():
+    assert resolve_topology("ring", 1) == "ring"
+    assert resolve_topology("torus2x2", 1) == "ring"   # 1 chip: no links
+    assert resolve_topology("torus2x2", 4) == "torus2x2"
+    assert resolve_topology("torus2x2", 3) is None     # grid mismatch
+    assert resolve_topology("torus", 4) == "torus2x2"
+    assert resolve_topology("biring", 4) == "biring"
+
+
+def test_sweep_dedups_single_chip_wirings(plan_cache):
+    """At n_chips=1 every wiring resolves to the same scenario — it must
+    be planned once, not once per requested topology."""
+    svc = PlanService()
+    budgets = _budgets("tight2", n=1)
+    rows = svc.sweep("tight2", budgets=budgets,
+                     topologies=("ring", "torus2x2", "biring"),
+                     chip_counts=(1,), polish_iters=50)
+    assert len(rows) == len(budgets)
+    assert all(r["topology"] == "ring" and r["n_chips"] == 1 for r in rows)
+
+
+def test_unknown_network_rejected():
+    with pytest.raises(KeyError):
+        PlanService().query(PlanQuery(network="nope"))
+
+
+# ------------------------------------------------------------------ #
+# Query rows: verification, fingerprints, cache attribution
+# ------------------------------------------------------------------ #
+
+def test_query_verified_row_with_attribution(plan_cache):
+    svc = PlanService()
+    q = PlanQuery(network="tight2", size_mem=_budgets("tight2", n=1)[0],
+                  polish_iters=50)
+    row = svc.query(q)
+    assert row["feasible"] and row["verified"]
+    assert row["solver_calls"] >= 1
+    assert isinstance(row["fingerprint"], str) and len(row["fingerprint"]) >= 16
+    # same query again: the LRU answers, zero extra store traffic
+    row2 = svc.query(q)
+    assert row2["fingerprint"] == row["fingerprint"]
+    assert row2["cache_hits"] >= 1
+
+
+def test_warm_sweep_bit_identical_and_served_from_store(plan_cache):
+    """Cold sweep populates the store; after an in-process 'restart'
+    (LRUs emptied, store object rebuilt) the warm sweep must replay
+    bit-identical plans from disk."""
+    svc = PlanService()
+    kw = dict(budgets=_budgets("tight2"), topologies=("ring",),
+              chip_counts=(1,), polish_iters=50)
+    cold = svc.sweep("tight2", **kw)
+    assert len(plan_cache) >= 1
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+    store_mod.reset()
+    warm = svc.sweep("tight2", **kw)
+    store = store_mod.active_store()
+    assert store.hits >= 1
+    assert [r["feasible"] for r in warm] == [r["feasible"] for r in cold]
+    for c, w in zip(cold, warm):
+        if c["feasible"]:
+            assert w["fingerprint"] == c["fingerprint"]
+            assert w["total_duration"] == c["total_duration"]
+
+
+# ------------------------------------------------------------------ #
+# CLI
+# ------------------------------------------------------------------ #
+
+def test_cli_exit_zero_and_json_out(tmp_path, plan_cache, capsys):
+    out = tmp_path / "sweep.json"
+    rc = plan_server.main([
+        "--network", "tight2", "--budgets", "auto",
+        "--topologies", "ring", "--chips", "1",
+        "--iters", "50", "--out", str(out)])
+    assert rc == 0
+    payload = json.loads(out.read_text())
+    (sweep,) = payload["sweeps"]
+    assert sweep["network"] == "tight2"
+    assert all(r["verified"] for r in sweep["rows"] if r["feasible"])
+    assert payload["cache"]["lru"]["solve_cached"]["misses"] >= 0
+    assert "plan_server" in capsys.readouterr().out

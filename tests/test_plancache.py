@@ -1,0 +1,239 @@
+"""Persistent plan cache (``repro.plancache``): content-hashed keys,
+cold/warm restart round-trips (bit-identical), typed corruption recovery
+(evict + transparent re-solve), schema-version invalidation, atomic
+concurrent writes, and the never-worse warm-start rule (ISSUE 10)."""
+import dataclasses
+import json
+import os
+import threading
+
+import pytest
+
+from repro.core import solver
+from repro.core.conv_spec import ConvSpec
+from repro.core.cost_model import HardwareModel
+from repro.plancache import (CacheCorruptionError, CacheSchemaError,
+                             PlanStore)
+from repro.plancache import codec
+from repro.plancache import store as store_mod
+
+SPEC = ConvSpec(3, 10, 10, 4, 3, 3)
+HW = HardwareModel(nbop_pe=10 ** 9, size_mem=600)
+KNOBS = dict(polish_iters=200, use_milp=False)
+
+
+@pytest.fixture
+def plan_cache(tmp_path):
+    """A throwaway configured store; restores the env and clears every
+    in-memory layer afterwards."""
+    prev = os.environ.get(store_mod.ENV_VAR)
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+    store = store_mod.configure(tmp_path / "cache")
+    yield store
+    if prev is None:
+        store_mod.configure(None)
+    else:
+        store_mod.configure(prev)
+    store_mod.reset()
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+
+
+def _restart():
+    """In-process stand-in for a process restart: both LRUs emptied and
+    the store object (with its counters) rebuilt from the env."""
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+    store_mod.reset()
+    return store_mod.active_store()
+
+
+def _entry_files(store):
+    return sorted(store.root.glob("*.json"))
+
+
+# ------------------------------------------------------------------ #
+# Keys
+# ------------------------------------------------------------------ #
+
+def test_default_equivalent_keys_collide():
+    """Omitted knobs hash identically to explicitly-passed defaults —
+    the canonicalization lru_cache itself does not do."""
+    bare_key, bare_fam = codec.solve_key(SPEC, 4, HW)
+    full_key, full_fam = codec.solve_key(
+        SPEC, 4, HW, nb_data_reload=2, time_limit=30.0,
+        polish_iters=30_000, use_milp=True, rng_seed=0, polish_restarts=1)
+    assert bare_key == full_key and bare_fam == full_fam
+    assert store_mod.canonical_digest(bare_key) == \
+        store_mod.canonical_digest(full_key)
+
+
+def test_family_digest_groups_budget_and_p_neighbors():
+    """The family digest drops exactly the warm-start axes (p and
+    size_mem): neighbours share it, different knobs/specs do not."""
+    _, fam = codec.solve_key(SPEC, 4, HW, **KNOBS)
+    _, fam_mem = codec.solve_key(
+        SPEC, 4, dataclasses.replace(HW, size_mem=900), **KNOBS)
+    _, fam_p = codec.solve_key(SPEC, 2, HW, **KNOBS)
+    assert fam == fam_mem == fam_p
+    _, fam_knob = codec.solve_key(SPEC, 4, HW, polish_iters=100,
+                                  use_milp=False)
+    _, fam_spec = codec.solve_key(ConvSpec(3, 12, 12, 4, 3, 3), 4, HW,
+                                  **KNOBS)
+    assert fam_knob != fam and fam_spec != fam
+
+
+def test_unknown_knob_rejected():
+    with pytest.raises(TypeError):
+        codec.solve_key(SPEC, 4, HW, not_a_knob=1)
+
+
+# ------------------------------------------------------------------ #
+# Cold/warm round-trip
+# ------------------------------------------------------------------ #
+
+def test_cold_warm_restart_round_trip_bit_identical(plan_cache):
+    cold = solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    assert plan_cache.misses == 1 and plan_cache.writes == 1
+    store = _restart()
+    warm = solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    assert store.hits == 1 and store.misses == 0
+    assert warm == cold                    # bit-identical SolveResult
+    assert warm.strategy == cold.strategy
+
+
+def test_s2_round_trip_under_sub_kernel_budget(plan_cache):
+    """A budget below the kernel set forces the S2 path; its S2Result
+    (schedule + kernel groups) must survive the disk round-trip."""
+    tight = HardwareModel(nbop_pe=10 ** 9, size_mem=60)
+    assert tight.size_mem < SPEC.kernel_elements
+    cold = solver.best_s2_cached(SPEC, tight)
+    _restart()
+    warm = solver.best_s2_cached(SPEC, tight)
+    assert warm == cold
+    assert warm.strategy.kernel_groups == cold.strategy.kernel_groups
+    assert warm.strategy.schedule == cold.strategy.schedule
+
+
+def test_lru_hit_never_touches_store(plan_cache):
+    solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    before = plan_cache.stats()
+    solver.solve_cached(SPEC, 4, HW, **KNOBS)     # LRU layer answers
+    assert plan_cache.stats() == before
+
+
+# ------------------------------------------------------------------ #
+# Corruption recovery
+# ------------------------------------------------------------------ #
+
+def test_truncated_entry_typed_error_and_transparent_resolve(plan_cache):
+    cold = solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    (path,) = _entry_files(plan_cache)
+    path.write_text(path.read_text()[: 40])        # truncate mid-JSON
+    with pytest.raises(CacheCorruptionError) as ei:
+        plan_cache.load_entry(path)
+    assert ei.value.path == str(path)
+    assert not isinstance(ei.value, CacheSchemaError)
+    store = _restart()
+    again = solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    assert again == cold                            # re-solved, not crashed
+    assert store.corruptions == 1 and store.evictions == 1
+    assert store.hits == 0
+
+
+def test_garbage_payload_evicted_not_trusted(plan_cache):
+    solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    (path,) = _entry_files(plan_cache)
+    payload = json.loads(path.read_text())
+    payload["result"]["strategy"]["groups"] = [[999999]]   # illegal pixel
+    path.write_text(json.dumps(payload))
+    store = _restart()
+    res = solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    assert res.strategy.spec == SPEC                # decoded fresh solve
+    assert store.corruptions == 1
+
+
+def test_schema_version_bump_invalidates(plan_cache):
+    solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    (path,) = _entry_files(plan_cache)
+    payload = json.loads(path.read_text())
+    payload["schema"] = store_mod.SCHEMA_VERSION + 1
+    path.write_text(json.dumps(payload))
+    with pytest.raises(CacheSchemaError):
+        plan_cache.load_entry(path)
+    store = _restart()
+    solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    assert store.stale == 1 and store.hits == 0
+    # the stale file was replaced by a fresh current-schema entry
+    (path2,) = _entry_files(store)
+    assert json.loads(path2.read_text())["schema"] == \
+        store_mod.SCHEMA_VERSION
+
+
+def test_concurrent_writers_atomic(tmp_path):
+    """N racing writers to the same key: the store must end with one
+    complete, parseable entry (os.replace atomicity) and no tmp litter."""
+    store = PlanStore(tmp_path / "race")
+    key, fam = codec.s2_key(SPEC, HW)
+    results = [{"v": i, "blob": "x" * 5000} for i in range(8)]
+    threads = [threading.Thread(
+        target=store.put, args=("s2", key, fam, {"result": r}))
+        for r in results]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.writes == 8
+    (path,) = _entry_files(store)
+    payload = store.load_entry(path)               # parses: no torn write
+    assert payload["key"] == key
+    assert payload["result"] in [{"result": r} for r in results]
+    assert not list(store.root.glob("*.tmp"))
+
+
+def test_disabled_without_env(tmp_path):
+    prev = os.environ.get(store_mod.ENV_VAR)
+    try:
+        store_mod.configure(None)
+        assert store_mod.active_store() is None
+        solver.solve_cached.cache_clear()
+        solver.solve_cached(SPEC, 4, HW, **KNOBS)
+        assert not list(tmp_path.glob("*.json"))
+    finally:
+        if prev is not None:
+            store_mod.configure(prev)
+        store_mod.reset()
+        solver.solve_cached.cache_clear()
+
+
+# ------------------------------------------------------------------ #
+# Warm-started delta re-planning
+# ------------------------------------------------------------------ #
+
+def test_neighbor_warm_start_considered_and_never_worse(plan_cache):
+    """A delta query (same spec, shifted budget) reprices the cached
+    neighbour; whatever it adopts must not lose to the cold search."""
+    solver.solve_cached(SPEC, 4, HW, **KNOBS)
+    cold_neighbor = HardwareModel(nbop_pe=10 ** 9, size_mem=560)
+    store_mod.reset()
+    solver.solve_cached.cache_clear()
+    solver.best_s2_cached.cache_clear()
+    res = solver.solve_cached(SPEC, 4, cold_neighbor, **KNOBS)
+    store = store_mod.active_store()
+    assert store.warm_considered >= 1
+    # never-worse: adopted or not, the result beats the pure cold solve
+    fresh = solver._solve_fresh(SPEC, 4, cold_neighbor, **KNOBS)
+    assert res.strategy.full_duration(cold_neighbor) <= \
+        fresh.strategy.full_duration(cold_neighbor) + 1e-9
+    assert res.strategy.peak_footprint_elements() <= 560
+
+
+def test_neighbor_ranking_prefers_closest_budget():
+    key_near = {"spec": codec.spec_key(SPEC), "p": 4,
+                "hw": {**codec.hw_key(HW), "size_mem": 590}, "knobs": {}}
+    key_far = {"spec": codec.spec_key(SPEC), "p": 4,
+               "hw": {**codec.hw_key(HW), "size_mem": 60}, "knobs": {}}
+    ranked = sorted([key_far, key_near],
+                    key=lambda k: solver._neighbor_rank(k, 4, HW))
+    assert ranked[0] is key_near
